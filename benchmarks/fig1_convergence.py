@@ -1,0 +1,171 @@
+"""Paper Fig. 1: joint log P(X, Z) on held-out data over wall-clock time.
+
+Runs the collapsed Gibbs baseline and the hybrid sampler at P in {1, 3, 5}
+on the Cambridge synthetic set and writes a (run, iter, time_s, ll_eval,
+K, sigma_x) trace to artifacts/fig1.csv.
+
+Paper claims validated here (EXPERIMENTS.md §Fig1):
+  * adding processors gives speedup without a big difference in estimate
+    quality (traces reach the same ll plateau);
+  * even with one processor the hybrid converges faster than the purely
+    collapsed sampler (its instantiated-feature sweep is vectorized; only
+    the tail is a serial row scan).
+
+Full-size run (paper: N=1000, 1000 iters): ``python -m benchmarks.fig1_convergence
+--N 1000 --iters 1000``. The default is scaled down to finish on one CPU core
+in a few minutes; the qualitative ordering is identical.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ibp import (
+    IBPHypers,
+    collapsed_sweep,
+    hybrid_iteration_vmap,
+    init_hybrid,
+    init_state,
+)
+from repro.core.ibp.diagnostics import heldout_joint_loglik
+from repro.data import cambridge_data, shard_rows, train_eval_split
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def run_collapsed(X_train, X_eval, iters, K_max, seed, eval_every):
+    N, D = X_train.shape
+    st = init_state(jax.random.key(seed), N, D, K_max, K_init=1)
+    X = jnp.asarray(X_train)
+    hyp = IBPHypers()
+    # warm up the jit so timing measures sampling, not compilation
+    collapsed_sweep(st, X, hyp).Z.block_until_ready()
+    trace = []
+    t0 = time.time()
+    for it in range(iters):
+        st = collapsed_sweep(st, X, hyp)
+        if (it + 1) % eval_every == 0 or it == iters - 1:
+            jax.block_until_ready(st.Z)
+            t = time.time() - t0
+            # collapsed sampler has no instantiated A: draw it for eval
+            from repro.core.ibp import math as ibm
+            ZtZ = (st.Z.T @ st.Z) * ibm.mask_outer(st.active)
+            ZtX = (st.Z.T @ X) * st.active[:, None]
+            A = ibm.a_posterior_draw(
+                jax.random.fold_in(st.key, 55), ZtZ, ZtX, st.active,
+                st.sigma_x, st.sigma_a,
+            )
+            m = jnp.sum(st.Z * st.active[None, :], axis=0)
+            pi = jnp.clip(m / N, 1e-4, 1 - 1e-4) * st.active
+            ll = float(heldout_joint_loglik(
+                jnp.asarray(X_eval), A, pi, st.active, st.sigma_x,
+                jax.random.fold_in(st.key, 99),
+            ))
+            trace.append(dict(run="collapsed", iter=it + 1, time_s=t,
+                              ll_eval=ll, K=int(st.k_plus),
+                              sigma_x=float(st.sigma_x)))
+    return trace
+
+
+def run_hybrid(X_train, X_eval, P, iters, L, K_max, seed, eval_every):
+    Xs = jnp.asarray(shard_rows(X_train, P))
+    N = Xs.shape[0] * Xs.shape[1]
+    hyp = IBPHypers()
+    gs, ss = init_hybrid(jax.random.key(seed), Xs, K_max, K_tail=8, K_init=4)
+    g, s = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=L, N_global=N)
+    jax.block_until_ready(s.Z)  # warm-up compile
+    trace = []
+    t0 = time.time()
+    for it in range(iters):
+        gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=L, N_global=N)
+        if (it + 1) % eval_every == 0 or it == iters - 1:
+            jax.block_until_ready(ss.Z)
+            t = time.time() - t0
+            ll = float(heldout_joint_loglik(
+                jnp.asarray(X_eval), gs.A, gs.pi, gs.active, gs.sigma_x,
+                jax.random.fold_in(gs.key, 99),
+            ))
+            trace.append(dict(run=f"hybrid_P{P}", iter=it + 1, time_s=t,
+                              ll_eval=ll, K=int(jnp.sum(gs.active)),
+                              sigma_x=float(gs.sigma_x)))
+    return trace
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--N", type=int, default=240)
+    ap.add_argument("--iters", type=int, default=120)
+    ap.add_argument("--collapsed-iters", type=int, default=0,
+                    help="0 -> same as --iters")
+    ap.add_argument("--L", type=int, default=5)
+    ap.add_argument("--K-max", type=int, default=24)
+    ap.add_argument("--P", type=int, nargs="+", default=[1, 3, 5])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eval-every", type=int, default=10)
+    ap.add_argument("--skip-collapsed", action="store_true")
+    args = ap.parse_args(argv)
+
+    X, _, _ = cambridge_data(N=args.N, sigma_n=0.5, seed=args.seed)
+    X_train, X_eval = train_eval_split(X, eval_frac=0.1, seed=args.seed)
+
+    rows = []
+    if not args.skip_collapsed:
+        rows += run_collapsed(X_train, X_eval,
+                              args.collapsed_iters or args.iters,
+                              args.K_max, args.seed, args.eval_every)
+        print(f"collapsed: done ({rows[-1]['time_s']:.1f}s, "
+              f"ll={rows[-1]['ll_eval']:.1f}, K={rows[-1]['K']})", flush=True)
+    for P in args.P:
+        tr = run_hybrid(X_train, X_eval, P, args.iters, args.L, args.K_max,
+                        args.seed, args.eval_every)
+        rows += tr
+        print(f"hybrid P={P}: done ({tr[-1]['time_s']:.1f}s, "
+              f"ll={tr[-1]['ll_eval']:.1f}, K={tr[-1]['K']})", flush=True)
+
+    os.makedirs(ART, exist_ok=True)
+    out = os.path.join(ART, "fig1.csv")
+    with open(out, "w") as fh:
+        fh.write("run,iter,time_s,ll_eval,K,sigma_x\n")
+        for r in rows:
+            fh.write(f"{r['run']},{r['iter']},{r['time_s']:.3f},"
+                     f"{r['ll_eval']:.2f},{r['K']},{r['sigma_x']:.4f}\n")
+    print(f"-> {out}")
+
+    # contract for benchmarks.run: name,us_per_call,derived
+    summary = {}
+    for r in rows:
+        summary[r["run"]] = r  # last record per run wins
+    csv_lines = []
+    for name, r in summary.items():
+        us = r["time_s"] / r["iter"] * 1e6
+        csv_lines.append(
+            f"fig1__{name},{us:.0f},final_ll={r['ll_eval']:.1f};K={r['K']}"
+        )
+    # the paper's headline: time for the hybrid to pass the collapsed
+    # sampler's final ll
+    if "collapsed" in summary:
+        target = summary["collapsed"]["ll_eval"]
+        for name, r in summary.items():
+            if name == "collapsed":
+                continue
+            first = next((x for x in rows if x["run"] == name
+                          and x["ll_eval"] >= target), None)
+            if first:
+                csv_lines.append(
+                    f"fig1__{name}__time_to_collapsed_ll,"
+                    f"{first['time_s'] * 1e6:.0f},"
+                    f"vs_collapsed_s={summary['collapsed']['time_s']:.1f}"
+                )
+    for line in csv_lines:
+        print(line)
+    return csv_lines
+
+
+if __name__ == "__main__":
+    main()

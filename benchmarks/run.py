@@ -1,0 +1,112 @@
+"""Benchmark harness: one entry per paper table/figure + framework benches.
+
+``python -m benchmarks.run [--quick] [--only fig1,fig2,kernels,scaling,roofline]``
+
+Prints a ``name,us_per_call,derived`` CSV block at the end (the harness
+contract). Individual benchmarks are importable modules with their own CLIs
+for full-size runs; this runner uses CPU-sized defaults.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _section(title: str):
+    print(f"\n===== {title} " + "=" * max(0, 60 - len(title)), flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smallest sizes (CI smoke)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of "
+                         "fig1,fig2,kernels,scaling,roofline")
+    args = ap.parse_args(argv)
+    only = set(filter(None, args.only.split(",")))
+
+    def want(name: str) -> bool:
+        return not only or name in only
+
+    csv: list[str] = []
+    failures: list[str] = []
+    t_all = time.time()
+
+    if want("kernels"):
+        _section("kernels: Pallas vs jnp-oracle + arithmetic intensity")
+        from benchmarks import kernels
+        try:
+            csv += kernels.main(["--N", "1024"] if args.quick else [])
+        except Exception:
+            failures.append("kernels")
+            traceback.print_exc()
+
+    if want("fig1"):
+        _section("fig1: convergence vs wall-clock (collapsed vs hybrid P)")
+        from benchmarks import fig1_convergence
+        try:
+            fig1_args = (["--N", "120", "--iters", "30", "--eval-every", "10"]
+                         if args.quick else
+                         ["--N", "240", "--iters", "80", "--eval-every", "10"])
+            csv += fig1_convergence.main(fig1_args)
+        except Exception:
+            failures.append("fig1")
+            traceback.print_exc()
+
+    if want("fig2"):
+        _section("fig2: posterior feature recovery (Cambridge)")
+        from benchmarks import fig2_features
+        try:
+            fig2_args = (["--N", "150", "--iters", "40"] if args.quick
+                         else ["--N", "300", "--iters", "100"])
+            csv += fig2_features.main(fig2_args)
+        except Exception:
+            failures.append("fig2")
+            traceback.print_exc()
+
+    if want("scaling"):
+        _section("scaling: iteration time vs P (vmap + shard_map)")
+        from benchmarks import scaling
+        try:
+            sc_args = ["--iters", "3", "--P", "1", "2", "4"] if args.quick \
+                else ["--iters", "8", "--P", "1", "2", "4", "8"]
+            csv += scaling.main(sc_args)
+        except Exception:
+            failures.append("scaling")
+            traceback.print_exc()
+
+    if want("roofline"):
+        _section("roofline: 3-term analysis from dry-run artifacts")
+        try:
+            from benchmarks import roofline
+            rows = roofline.full_table("pod1")
+            ok = [r for r in rows if r and "dominant" in r]
+            print(roofline.render_markdown(rows))
+            for r in ok:
+                csv.append(
+                    f"roofline__{r['arch']}__{r['shape']},"
+                    f"{r['t_star_s'] * 1e6:.1f},"
+                    f"dominant={r['dominant']};mfu={r['mfu_at_roofline']:.3f}"
+                )
+            if not ok:
+                print("(no dry-run artifacts found — run "
+                      "`python -m repro.launch.dryrun --all` first)")
+        except Exception:
+            failures.append("roofline")
+            traceback.print_exc()
+
+    _section(f"CSV (total {time.time() - t_all:.0f}s)")
+    print("name,us_per_call,derived")
+    for line in csv:
+        print(line)
+    if failures:
+        print(f"\nFAILED sections: {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

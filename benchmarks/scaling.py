@@ -1,0 +1,123 @@
+"""Scaling: hybrid-sampler iteration time vs processor count P.
+
+Two measurements (artifacts/scaling.csv):
+
+  * serial-tail amortization on ONE device (vmap driver): the paper's reason
+    hybrid scales — the only serial O(N_p) scan is the collapsed tail on p',
+    so per-iteration serial work shrinks as 1/P while the uncollapsed sweep
+    is a fixed batch of matrix work.
+  * shard_map step time on P forced host devices (subprocess, 1..8): proves
+    the production collective path runs at any P and measures the sync
+    overhead (all host devices share one core, so this is overhead, not
+    speedup).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ibp import IBPHypers, hybrid_iteration_vmap, init_hybrid
+from repro.data import cambridge_data, shard_rows
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def time_vmap(N: int, P: int, iters: int, L: int, K_max: int) -> float:
+    X, _, _ = cambridge_data(N=N, seed=0)
+    Xs = jnp.asarray(shard_rows(X, P))
+    hyp = IBPHypers()
+    gs, ss = init_hybrid(jax.random.key(0), Xs, K_max, K_tail=8, K_init=4)
+    gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=L, N_global=N)
+    jax.block_until_ready(ss.Z)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=L, N_global=N)
+    jax.block_until_ready(ss.Z)
+    return (time.time() - t0) / iters
+
+
+def time_shardmap(N: int, P: int, iters: int, L: int, K_max: int) -> float:
+    """Run in a subprocess with P forced devices; returns s/iter."""
+    code = textwrap.dedent(f"""
+        import time, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.data import cambridge_data, shard_rows
+        from repro.core.ibp import IBPHypers, init_hybrid, \\
+            make_hybrid_iteration_shardmap
+        X, _, _ = cambridge_data(N={N}, seed=0)
+        Pn = {P}
+        Xs = jnp.asarray(shard_rows(X, Pn))
+        gs, ss = init_hybrid(jax.random.key(0), Xs, {K_max}, K_tail=8,
+                             K_init=4)
+        mesh = jax.make_mesh((Pn,), ('data',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        step = make_hybrid_iteration_shardmap(mesh, ('data',), IBPHypers(),
+                                              L={L}, N_global={N})
+        with jax.set_mesh(mesh):
+            sh = NamedSharding(mesh, P('data'))
+            Xf = jax.device_put(Xs.reshape(-1, Xs.shape[-1]), sh)
+            Zf = jax.device_put(ss.Z.reshape(-1, {K_max}), sh)
+            Zt = jax.device_put(ss.Z_tail.reshape(-1, 8), sh)
+            ta = jax.device_put(ss.tail_active, sh)
+            gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)   # compile
+            jax.block_until_ready(Zf)
+            t0 = time.time()
+            for _ in range({iters}):
+                gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)
+            jax.block_until_ready(Zf)
+        print((time.time() - t0) / {iters})
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    return float(out.stdout.strip().splitlines()[-1])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--N", type=int, default=240)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--L", type=int, default=5)
+    ap.add_argument("--K-max", type=int, default=24)
+    ap.add_argument("--P", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--skip-shardmap", action="store_true")
+    args = ap.parse_args(argv)
+
+    rows, lines = [], []
+    for P in args.P:
+        s = time_vmap(args.N, P, args.iters, args.L, args.K_max)
+        rows.append(("vmap", P, s))
+        lines.append(f"scaling__vmap_P{P},{s * 1e6:.0f},N={args.N};L={args.L}")
+        print(lines[-1], flush=True)
+    if not args.skip_shardmap:
+        for P in args.P:
+            s = time_shardmap(args.N, P, args.iters, args.L, args.K_max)
+            rows.append(("shard_map", P, s))
+            lines.append(
+                f"scaling__shardmap_P{P},{s * 1e6:.0f},N={args.N};L={args.L}"
+            )
+            print(lines[-1], flush=True)
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "scaling.csv"), "w") as fh:
+        fh.write("driver,P,s_per_iter\n")
+        for d, P, s in rows:
+            fh.write(f"{d},{P},{s:.4f}\n")
+    print(f"-> {os.path.join(ART, 'scaling.csv')}")
+    return lines
+
+
+if __name__ == "__main__":
+    main()

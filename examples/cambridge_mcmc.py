@@ -1,0 +1,29 @@
+"""End-to-end driver: the paper's experiment (Sec. 4) with the production
+runtime — fault-tolerant, checkpointed, elastic.
+
+Reproduces the paper's setup: the 1000 x 36 Cambridge set, 1000 iterations,
+5 sub-iterations, P processors — through MCMCDriver, which checkpoints every
+``--ckpt-every`` iterations and auto-resumes (kill it mid-run and rerun the
+same command to see restart; rerun with a different --P to see elastic
+re-sharding from the same checkpoint).
+
+    PYTHONPATH=src python examples/cambridge_mcmc.py            # scaled down
+    PYTHONPATH=src python examples/cambridge_mcmc.py --paper    # full size
+"""
+import argparse
+import sys
+
+from repro.launch import mcmc
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--paper", action="store_true",
+                help="full paper-size run (N=1000, 1000 iters; slow on CPU)")
+ap.add_argument("--P", type=int, default=5)
+args, rest = ap.parse_known_args()
+
+if args.paper:
+    argv = ["--N", "1000", "--iters", "1000", "--L", "5", "--P", str(args.P)]
+else:
+    argv = ["--N", "300", "--iters", "120", "--L", "5", "--P", str(args.P),
+            "--K-max", "24"]
+sys.exit(mcmc.main(argv + rest))

@@ -1,0 +1,64 @@
+"""Distributed IBP inference over a real JAX mesh (shard_map + psum).
+
+Relaunches itself with 8 forced host devices, builds a ('data',) mesh, and
+runs the hybrid sampler with X and Z physically sharded across devices —
+the production code path that runs unchanged on a TPU pod (launch/mesh.py
+builds the (data, model) / (pod, data, model) meshes).
+
+    PYTHONPATH=src python examples/parallel_ibp.py
+"""
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:  # relaunch with 8 virtual devices
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.ibp import (IBPHypers, init_hybrid,
+                            make_hybrid_iteration_shardmap)
+from repro.core.ibp.diagnostics import train_joint_loglik
+from repro.data import cambridge_data, shard_rows
+
+N, Pn, K_max, K_tail = 320, 8, 16, 6
+print(f"devices: {jax.device_count()} | observations: {N} over P={Pn} shards")
+
+X, _, _ = cambridge_data(N=N, sigma_n=0.5, seed=1)
+Xs = jnp.asarray(shard_rows(X, Pn))
+
+mesh = jax.make_mesh((Pn,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+gs, ss = init_hybrid(jax.random.key(1), Xs, K_max, K_tail=K_tail, K_init=3)
+step = make_hybrid_iteration_shardmap(mesh, ("data",), IBPHypers(), L=5,
+                                      N_global=N)
+
+with jax.set_mesh(mesh):
+    sh = NamedSharding(mesh, P("data"))
+    # place each observation shard on its device
+    Xf = jax.device_put(Xs.reshape(N, -1), sh)
+    Zf = jax.device_put(ss.Z.reshape(N, K_max), sh)
+    Zt = jax.device_put(ss.Z_tail.reshape(N, K_tail), sh)
+    ta = jax.device_put(ss.tail_active, sh)
+
+    for it in range(60):
+        gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)
+        # serialize dispatch: 8 virtual devices share one core here, and
+        # letting iterations queue up can starve the collective rendezvous
+        jax.block_until_ready(Zf)
+        if (it + 1) % 20 == 0:
+            ll = train_joint_loglik(jnp.asarray(X), Zf, gs.A, gs.pi,
+                                    gs.active, gs.sigma_x)
+            print(f"iter {it + 1:3d}: K+ = {int(gs.active.sum())}, "
+                  f"p' = shard {int(gs.p_prime)}, "
+                  f"log P(X,Z) = {float(ll):.1f}")
+    # Z really is distributed: one shard per device
+    assert len(Zf.sharding.device_set) == Pn
+
+K = int(gs.active.sum())
+assert 3 <= K <= 9, K
+print(f"\nOK — converged to K+ = {K} features with Z sharded on "
+      f"{len(Zf.sharding.device_set)} devices")

@@ -1,0 +1,33 @@
+"""LM-substrate example: train a ~100M-param smollm-135m for a few hundred
+steps with the framework's data pipeline, AdamW, checkpointing, and
+restart-safe driver — the same train_step the multi-pod dry-run lowers at
+256/512 chips.
+
+On CPU the full 135M model is exercised with a short schedule by default;
+--smoke switches to the reduced same-family config (seconds). All ten
+assigned architectures work here via --arch.
+
+    PYTHONPATH=src python examples/train_lm.py                # 135M, short
+    PYTHONPATH=src python examples/train_lm.py --smoke        # tiny, fast
+    PYTHONPATH=src python examples/train_lm.py --arch minicpm3-4b --smoke
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="smollm-135m")
+ap.add_argument("--smoke", action="store_true")
+ap.add_argument("--steps", type=int, default=0,
+                help="0 -> 300 full / 30 smoke")
+args, rest = ap.parse_known_args()
+
+steps = args.steps or (30 if args.smoke else 300)
+argv = ["--arch", args.arch, "--steps", str(steps), "--log-every", "10"]
+if args.smoke:
+    argv.append("--smoke")
+else:
+    # CPU-feasible tokens/step for the full 135M model
+    argv += ["--batch", "4", "--seq", "128"]
+sys.exit(train.main(argv + rest))

@@ -1,0 +1,3 @@
+from .npz import latest_step, load_pytree, restore, save_pytree
+
+__all__ = ["save_pytree", "load_pytree", "restore", "latest_step"]

@@ -1,0 +1,26 @@
+from .state import IBPHypers, IBPState, init_state
+from .sweeps import sufficient_stats, uncollapsed_sweep
+from .collapsed import collapsed_sweep
+from .uncollapsed import uncollapsed_step
+from .hybrid import (
+    HybridGlobal,
+    HybridShard,
+    hybrid_iteration_vmap,
+    init_hybrid,
+    make_hybrid_iteration_shardmap,
+)
+
+__all__ = [
+    "IBPHypers",
+    "IBPState",
+    "init_state",
+    "uncollapsed_sweep",
+    "sufficient_stats",
+    "collapsed_sweep",
+    "uncollapsed_step",
+    "HybridGlobal",
+    "HybridShard",
+    "init_hybrid",
+    "hybrid_iteration_vmap",
+    "make_hybrid_iteration_shardmap",
+]

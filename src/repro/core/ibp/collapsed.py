@@ -1,0 +1,212 @@
+"""Collapsed Gibbs sampler for the linear-Gaussian IBP (Griffiths & Ghahramani).
+
+This is the serial baseline the paper compares against (Fig. 1). A is fully
+integrated out. For each row n we use the posterior-predictive form
+
+    x_n | z_n, Z_-n, X_-n ~ N( z_n H_-,  sigma_x^2 (1 + z_n M_- z_n^T) I )
+
+with M_- = (Z_-^T Z_- + (sx^2/sa^2) I)^{-1}, H_- = M_- Z_-^T X_-, which makes
+each bit flip O(K + D) after one O(K^3 + K^2 D) per-row factorization.
+New dishes use the exact truncated-Gibbs step: row-n singletons are dropped
+and j_new ~ P(j | rest) ∝ Poisson(j; alpha/N) · lik(j) over j = 0..J_MAX
+(lik(j) closed-form: new columns only add j·sa^2 to the predictive variance).
+
+Everything is padded to K_max with an ``active`` mask. Complexity per sweep:
+O(N (K^3 + K^2 D)) — the quadratic-in-N cost the paper attributes to the
+collapsed sampler comes from K growing as alpha·log N plus serial row scans.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import math as ibm
+from .state import IBPHypers, IBPState
+
+Array = jax.Array
+
+J_MAX = 4  # truncation for per-row new-dish draws (P(j>4 | alpha/N) is negligible)
+
+
+def _log_poisson(j: Array, lam: Array) -> Array:
+    return j * jnp.log(lam) - lam - jax.lax.lgamma(j + 1.0)
+
+
+def _row_step(carry, n, *, X, N, D, birth="gibbs"):
+    """Resample row n's bits + new dishes, collapsed.
+
+    ``birth`` selects the new-dish move:
+      * "gibbs" — exact truncated Gibbs over j ∈ 0..J_MAX (G&G; collapsed
+        baseline).
+      * "mh" — the paper's Metropolis-Hastings move for the hybrid tail:
+        propose j ~ Poisson(alpha/N) and accept with the marginal-likelihood
+        ratio (prior ∝ proposal, so they cancel). Out-of-capacity proposals
+        are rejected.
+
+    ``N`` is the GLOBAL number of observations — in the hybrid sampler the
+    tail runs on processor p' with local rows but global-N priors
+    ((m_k - Z_nk)/N and Poisson(alpha/N)), exactly as in the paper's
+    pseudocode.
+    """
+    Z, active, ZtZ, ZtX, m, alpha, sx, sa, key = carry
+    x_n = X[n]
+    z = Z[n]
+    # ---- remove row n from the sufficient statistics
+    m_minus = m - z
+    ZtZ_m = ZtZ - jnp.outer(z, z)
+    ZtX_m = ZtX - jnp.outer(z, x_n)
+    # drop row-n singletons (m_minus == 0 while z == 1): they are re-proposed
+    # as part of the new-dish step (exact G&G scheme)
+    singleton = active * (m_minus <= 0.5) * z
+    z = z * (1.0 - singleton)
+    active_m = active * (1.0 - (active * (m_minus <= 0.5)))  # live cols w/ support
+    # ---- per-row factorization (exact; avoids rank-1 drift)
+    ratio = (sx / sa) ** 2
+    W = ibm.padded_W(ZtZ_m, active_m, ratio)
+    M, _ = ibm.chol_inv_logdet(W)
+    M = M * ibm.mask_outer(active_m)
+    H = M @ (ZtX_m * active_m[:, None])  # (K, D) posterior mean map
+    v = M @ z
+    q = jnp.dot(z, v)
+    mean = z @ H
+    inv2s2 = 0.5 / (sx**2)
+
+    K = Z.shape[1]
+    key, kbits, kdish, kslot = jax.random.split(key, 4)
+    uu = jnp.clip(jax.random.uniform(kbits, (K,), dtype=X.dtype), 1e-7, 1.0 - 1e-7)
+    u = jnp.log(uu) - jnp.log1p(-uu)  # logit(U): accept z=1 iff logodds > u
+
+    def bit_body(c, k):
+        z, v, q, mean = c
+        zk = z[k]
+        Mk = M[:, k]
+        Mkk = M[k, k]
+        Hk = H[k]
+        # state with bit k = 0
+        v0 = v - zk * Mk
+        q0 = q - zk * (2.0 * v[k] - Mkk)
+        mean0 = mean - zk * Hk
+        # state with bit k = 1
+        v1 = v0 + Mk
+        q1 = q0 + 2.0 * v0[k] + Mkk
+        mean1 = mean0 + Hk
+        s0 = 1.0 + q0
+        s1 = 1.0 + q1
+        r0 = x_n - mean0
+        r1 = x_n - mean1
+        ll0 = -0.5 * D * jnp.log(s0) - inv2s2 * jnp.dot(r0, r0) / s0
+        ll1 = -0.5 * D * jnp.log(s1) - inv2s2 * jnp.dot(r1, r1) / s1
+        mk = m_minus[k]
+        logodds = jnp.log(jnp.maximum(mk, 1e-20)) - jnp.log(N - mk) + ll1 - ll0
+        # sample; only live columns with support may flip
+        may = (active_m[k] > 0) & (mk > 0.5)
+        take1 = logodds > u[k]
+        znk = jnp.where(may, take1.astype(z.dtype), z[k])
+        pick1 = znk > 0.5
+        v = jnp.where(pick1, v1, v0)
+        q = jnp.where(pick1, q1, q0)
+        mean = jnp.where(pick1, mean1, mean0)
+        z = z.at[k].set(znk)
+        return (z, v, q, mean), None
+
+    (z, v, q, mean), _ = jax.lax.scan(bit_body, (z, v, q, mean), jnp.arange(K))
+
+    # ---- new dishes, j = 0..J_MAX
+    lam = alpha / N
+    s = 1.0 + q
+    r = x_n - mean
+    rss = jnp.dot(r, r)
+    js = jnp.arange(J_MAX + 1, dtype=X.dtype)
+    rho = (sa / sx) ** 2
+    s_j = s + js * rho
+    ll_j = -0.5 * D * jnp.log(s_j) - inv2s2 * rss / s_j
+    free = 1.0 - jnp.maximum(active_m, z)
+    n_free = jnp.sum(free)
+    if birth == "gibbs":
+        # exact truncated Gibbs: j ~ ∝ Poisson(j; lam) lik(j)
+        logits = _log_poisson(js, lam) + ll_j
+        logits = jnp.where(js <= n_free, logits, -jnp.inf)
+        j_new = jax.random.categorical(kdish, logits).astype(X.dtype)
+    else:
+        # paper's MH: propose j ~ Poisson(lam), accept w.p. lik(j)/lik(0)
+        kprop, kacc = jax.random.split(kdish)
+        j_prop = jax.random.poisson(kprop, lam).astype(X.dtype)
+        ok = (j_prop <= jnp.minimum(float(J_MAX), n_free))
+        j_idx = jnp.clip(j_prop, 0, J_MAX).astype(jnp.int32)
+        dll = ll_j[j_idx] - ll_j[0]
+        acc = jnp.log(jax.random.uniform(kacc, (), dtype=X.dtype)) < dll
+        j_new = jnp.where(ok & acc, j_prop, 0.0)
+    # place new dishes in the first j_new free slots
+    free_rank = jnp.cumsum(free) * free  # 1-indexed rank among free slots
+    newbits = ((free_rank >= 1.0) & (free_rank <= j_new)).astype(z.dtype)
+    z = z + newbits
+    active_new = jnp.maximum(active_m, newbits)
+
+    # ---- add row n back
+    m_new = m_minus * active_m + z  # dead/singleton cols contribute 0
+    ZtZ_n = ZtZ_m * ibm.mask_outer(active_m) + jnp.outer(z, z)
+    ZtX_n = ZtX_m * active_m[:, None] + jnp.outer(z, x_n)
+    Z = Z.at[n].set(z)
+    return (Z, active_new, ZtZ_n, ZtX_n, m_new, alpha, sx, sa, key), None
+
+
+@partial(jax.jit, static_argnames=("hyp",))
+def collapsed_sweep(state: IBPState, X: Array, hyp: IBPHypers) -> IBPState:
+    """One full collapsed Gibbs sweep over all rows + hyperparameter updates."""
+    N, D = X.shape
+    Z, active = state.Z, state.active
+    m = jnp.sum(Z * active[None, :], axis=0)
+    ZtZ = (Z.T @ Z) * ibm.mask_outer(active)
+    ZtX = (Z.T @ X) * active[:, None]
+    key, ksweep, kalpha, ksx, ksa = jax.random.split(state.key, 5)
+
+    body = partial(_row_step, X=X, N=float(N), D=D, birth="gibbs")
+    carry = (Z, active, ZtZ, ZtX, m, state.alpha, state.sigma_x, state.sigma_a, ksweep)
+    carry, _ = jax.lax.scan(body, carry, jnp.arange(N))
+    Z, active, ZtZ, ZtX, m, alpha, sx, sa, _ = carry
+
+    # prune columns that died during the sweep
+    active = active * (m > 0.5)
+    mask2 = ibm.mask_outer(active)
+    ZtZ = ZtZ * mask2
+    ZtX = ZtX * active[:, None]
+    Z = Z * active[None, :]
+    m = m * active
+    k_plus = jnp.sum(active)
+
+    # alpha | K+ ~ Gamma(a + K+, b + H_N)
+    if hyp.resample_alpha:
+        HN = ibm.harmonic(N)
+        alpha = ibm.gamma_draw(kalpha, hyp.a_alpha + k_plus, hyp.b_alpha + HN)
+
+    # sigma_x, sigma_a via random-walk MH on log-scale against collapsed lik
+    if hyp.resample_sigmas:
+        trXtX = jnp.sum(X * X)
+
+        def cll(sx_, sa_):
+            return ibm.collapsed_loglik(
+                trXtX, ZtX, ZtZ, active, jnp.float32(N), D, sx_, sa_
+            )
+
+        def mh(key_, cur, other, which):
+            kprop, kacc = jax.random.split(key_)
+            prop = cur * jnp.exp(0.1 * jax.random.normal(kprop, (), dtype=cur.dtype))
+            if which == "x":
+                d = cll(prop, other) - cll(cur, other)
+            else:
+                d = cll(other, prop) - cll(other, cur)
+            # log-normal RW: include log-scale Jacobian (log prop - log cur)
+            d = d + jnp.log(prop) - jnp.log(cur)
+            acc = jnp.log(jax.random.uniform(kacc, (), dtype=cur.dtype)) < d
+            return jnp.where(acc, prop, cur)
+
+        sx = mh(ksx, sx, sa, "x")
+        sa = mh(ksa, sa, sx, "a")
+
+    return IBPState(
+        Z=Z, A=state.A, pi=state.pi, active=active, tail=state.tail,
+        alpha=alpha, sigma_x=sx, sigma_a=sa, key=key,
+        p_prime=state.p_prime, it=state.it + 1,
+    )

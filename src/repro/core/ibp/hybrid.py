@@ -1,0 +1,499 @@
+"""The paper's hybrid parallel MCMC sampler for the IBP.
+
+One global iteration (paper Sec. 3 pseudocode):
+
+  for l = 1..L sub-iterations:
+      every shard p:   uncollapsed Gibbs sweep of Z over the K+ instantiated
+                       features given (pi, A)                  [data-parallel]
+      shard p' only:   collapsed Gibbs on its local tail features (A* integrated
+                       out, residual R = X_p - Z A as data, global-N priors)
+                       + MH birth of K_new ~ Poisson(alpha/N) per row
+  master sync:
+      psum tail mask -> promote p''s tail columns into free K+ slots
+      psum (m, ZtZ, ZtX) -> deactivate dead columns, draw A | Z,X then
+      pi_k ~ Beta(m_k, 1 + N - m_k)
+      psum ||X - Z A||^2 -> sigma_x^2, then sigma_a^2, alpha ~ conjugates
+      p' ~ Uniform{0..P-1}; clear tail
+
+Deviation from the paper (recorded in DESIGN.md §4): the master is
+*replicated* — every shard all-reduces the same sufficient statistics and
+draws identical posteriors from a shared PRNG key, so the paper's explicit
+gather -> master-compute -> broadcast round becomes a single all-reduce.
+The draws are bitwise identical across shards, hence semantically the same
+algorithm with strictly less communication.
+
+Exactness note: on p', the instantiated-feature sweep conditions on A+ only
+(tail contribution not subtracted), exactly as written in the paper's
+pseudocode; the tail sampler sees R = X_p - Z A+ as its data.
+
+Two drivers over the same per-shard kernels:
+  * ``hybrid_iteration_vmap`` — P shards simulated by vmap on one device
+    (CPU benchmarks / tests; psum == sum over the shard axis).
+  * ``make_hybrid_iteration_shardmap`` — shard_map over a mesh data axis
+    (the production path; psum == jax.lax.psum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import math as ibm
+from .collapsed import _row_step
+from .sweeps import uncollapsed_sweep
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HybridGlobal:
+    """Replicated across shards."""
+
+    A: Array         # (K_max, D)
+    pi: Array        # (K_max,)
+    active: Array    # (K_max,)
+    alpha: Array     # ()
+    sigma_x: Array   # ()
+    sigma_a: Array   # ()
+    key: Array       # PRNG key (shared)
+    p_prime: Array   # () int32
+    it: Array        # () int32
+    overflow: Array  # () int32 — promoted-feature drops due to K_max capacity
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HybridShard:
+    """Sharded along the observation axis. Leading axis = shard (size P)."""
+
+    Z: Array            # (P, N_p, K_max)
+    Z_tail: Array       # (P, N_p, K_tail)
+    tail_active: Array  # (P, K_tail)
+
+
+def init_hybrid(
+    key: Array,
+    X_shards: Array,  # (P, N_p, D)
+    K_max: int,
+    K_tail: int = 8,
+    alpha: float = 3.0,
+    sigma_x: float = 1.0,
+    sigma_a: float = 1.0,
+    K_init: int = 4,
+    init_from_data: bool = True,
+) -> tuple[HybridGlobal, HybridShard]:
+    P_, N_p, D = X_shards.shape
+    dtype = X_shards.dtype
+    k0, k1, k2 = jax.random.split(key, 3)
+    Z = jnp.zeros((P_, N_p, K_max), dtype)
+    if K_init > 0:
+        Z = Z.at[:, :, :K_init].set(
+            jax.random.bernoulli(k0, 0.5, (P_, N_p, K_init)).astype(dtype)
+        )
+    A = jnp.zeros((K_max, D), dtype)
+    if K_init > 0:
+        if init_from_data:
+            # seed features with (noised) data rows spread across shards —
+            # avoids the all-features-die nucleation trap at cold start
+            flat = X_shards.reshape(-1, D)
+            stride = max(1, flat.shape[0] // K_init)
+            seeds = flat[::stride][:K_init]
+            A = A.at[:K_init].set(
+                seeds + 0.1 * jax.random.normal(k1, seeds.shape, dtype)
+            )
+        else:
+            A = A.at[:K_init].set(
+                jax.random.normal(k1, (K_init, D), dtype) * sigma_a
+            )
+    active = jnp.zeros((K_max,), dtype).at[:K_init].set(1.0)
+    gs = HybridGlobal(
+        A=A,
+        pi=jnp.zeros((K_max,), dtype).at[:K_init].set(0.5),
+        active=active,
+        alpha=jnp.asarray(alpha, dtype),
+        sigma_x=jnp.asarray(sigma_x, dtype),
+        sigma_a=jnp.asarray(sigma_a, dtype),
+        key=k2,
+        p_prime=jnp.asarray(0, jnp.int32),
+        it=jnp.asarray(0, jnp.int32),
+        overflow=jnp.asarray(0, jnp.int32),
+    )
+    ss = HybridShard(
+        Z=Z,
+        Z_tail=jnp.zeros((P_, N_p, K_tail), dtype),
+        tail_active=jnp.zeros((P_, K_tail), dtype),
+    )
+    return gs, ss
+
+
+# --------------------------------------------------------------------------
+# per-shard kernels (unbatched: no leading P axis)
+# --------------------------------------------------------------------------
+
+
+def _tail_sub_iteration(
+    X_p: Array,
+    Z: Array,
+    Z_tail: Array,
+    tail_active: Array,
+    gs: HybridGlobal,
+    N_global: float,
+    key: Array,
+) -> tuple[Array, Array]:
+    """Collapsed Gibbs + MH births on the tail (runs on p' only)."""
+    D = X_p.shape[1]
+    # residual given instantiated features = the tail model's data
+    R = X_p - (Z * gs.active[None, :]) @ gs.A
+    m_t = jnp.sum(Z_tail, axis=0)
+    ZtZ_t = Z_tail.T @ Z_tail
+    ZtR = Z_tail.T @ R
+    body = partial(_row_step, X=R, N=N_global, D=D, birth="mh")
+    carry = (
+        Z_tail, tail_active, ZtZ_t, ZtR, m_t,
+        gs.alpha, gs.sigma_x, gs.sigma_a, key,
+    )
+    carry, _ = jax.lax.scan(body, carry, jnp.arange(X_p.shape[0]))
+    Z_tail, tail_active = carry[0], carry[1]
+    m_t = carry[4]
+    # prune dead tail columns
+    tail_active = tail_active * (m_t > 0.5)
+    Z_tail = Z_tail * tail_active[None, :]
+    return Z_tail, tail_active
+
+
+def shard_sub_iterations(
+    X_p: Array,
+    Z: Array,
+    Z_tail: Array,
+    tail_active: Array,
+    gs: HybridGlobal,
+    shard_idx: Array,
+    N_global: float,
+    L: int,
+    backend: str = "jnp",
+) -> tuple[Array, Array, Array]:
+    """L sub-iterations of the paper's inner loop on one shard."""
+    key_shard = jax.random.fold_in(gs.key, shard_idx)
+    is_pprime = shard_idx == gs.p_prime
+
+    def one(l, carry):
+        Z, Z_tail, tail_active = carry
+        kl = jax.random.fold_in(key_shard, l)
+        ku, kt = jax.random.split(kl)
+        Z = uncollapsed_sweep(
+            X_p, Z, gs.A, gs.pi, gs.active, gs.sigma_x, ku, backend=backend
+        )
+
+        def with_tail(args):
+            Z_tail, tail_active = args
+            return _tail_sub_iteration(
+                X_p, Z, Z_tail, tail_active, gs, N_global, kt
+            )
+
+        Z_tail, tail_active = jax.lax.cond(
+            is_pprime, with_tail, lambda a: a, (Z_tail, tail_active)
+        )
+        return Z, Z_tail, tail_active
+
+    Z, Z_tail, tail_active = jax.lax.fori_loop(
+        0, L, one, (Z, Z_tail, tail_active)
+    )
+    return Z, Z_tail, tail_active
+
+
+def promote_tail(
+    Z: Array,
+    Z_tail: Array,
+    tail_active_g: Array,
+    active: Array,
+) -> tuple[Array, Array, Array]:
+    """Scatter tail columns into free K+ slots (identical on every shard).
+
+    ``tail_active_g`` is the globally-reduced tail mask (only p' contributes),
+    so every shard computes the same slot assignment. Shards other than p'
+    scatter zero columns. Returns (Z_new, active_new, n_dropped).
+    """
+    K_max = Z.shape[1]
+    free = 1.0 - active
+    n_free = jnp.sum(free)
+    rank = jnp.cumsum(tail_active_g) * tail_active_g        # 1-indexed among tails
+    kept = tail_active_g * (rank <= n_free)
+    n_drop = jnp.sum(tail_active_g) - jnp.sum(kept)
+    free_rank = jnp.cumsum(free) * free                     # 1-indexed among frees
+    # target slot of tail j = index of the rank_j-th free slot
+    # searchsorted over cumsum(free) gives that index
+    cums = jnp.cumsum(free)
+    tgt = jnp.searchsorted(cums, jnp.maximum(rank, 1.0))    # (K_tail,)
+    tgt = jnp.clip(tgt, 0, K_max - 1).astype(jnp.int32)
+    cols = Z_tail * kept[None, :]
+    Z_new = Z.at[:, tgt].add(cols)                          # zero cols are no-ops
+    active_new = active.at[tgt].max(kept)
+    return Z_new, active_new, n_drop.astype(jnp.int32)
+
+
+def local_stats(X_p: Array, Z: Array) -> dict[str, Array]:
+    return {
+        "m": jnp.sum(Z, axis=0),
+        "ZtZ": Z.T @ Z,
+        "ZtX": Z.T @ X_p,
+    }
+
+
+def local_sse(X_p: Array, Z: Array, A: Array, active: Array) -> Array:
+    R = X_p - (Z * active[None, :]) @ A
+    return jnp.sum(R * R)
+
+
+def master_step1(
+    stats: dict[str, Array],
+    active: Array,
+    gs: HybridGlobal,
+    N_global: float,
+    D: int,
+) -> tuple[Array, Array, Array, Array]:
+    """Deaths, A | Z,X draw, pi | Z draw — identical on every shard."""
+    key = gs.key
+    k_a, k_pi = jax.random.split(jax.random.fold_in(key, 101))
+    m = stats["m"] * active
+    active = active * (m > 0.5)
+    mask2 = ibm.mask_outer(active)
+    ZtZ = stats["ZtZ"] * mask2
+    ZtX = stats["ZtX"] * active[:, None]
+    A = ibm.a_posterior_draw(k_a, ZtZ, ZtX, active, gs.sigma_x, gs.sigma_a)
+    # pi_k | Z ~ Beta(m_k, 1 + N - m_k) for instantiated features
+    a_beta = jnp.maximum(m, 1e-6)
+    b_beta = 1.0 + N_global - m
+    pi = jax.random.beta(k_pi, a_beta, b_beta) * active
+    return A, pi, active, m
+
+
+def master_step2(
+    sse: Array,
+    A: Array,
+    active: Array,
+    gs: HybridGlobal,
+    hyp,
+    N_global: float,
+    D: int,
+    P_: int,
+) -> tuple[Array, Array, Array, Array]:
+    """sigma_x, sigma_a, alpha, p' — identical on every shard."""
+    k_sx, k_sa, k_al, k_pp = jax.random.split(jax.random.fold_in(gs.key, 202), 4)
+    k_plus = jnp.sum(active)
+    if hyp.resample_sigmas:
+        sx2 = ibm.inverse_gamma_draw(
+            k_sx, hyp.a_sx + 0.5 * N_global * D, hyp.b_sx + 0.5 * sse
+        )
+        sigma_x = jnp.sqrt(sx2)
+        a_ss = jnp.sum(A * A * active[:, None])
+        sa2 = ibm.inverse_gamma_draw(
+            k_sa, hyp.a_sa + 0.5 * k_plus * D, hyp.b_sa + 0.5 * a_ss
+        )
+        # with no live features the draw is pure heavy-tailed prior and can
+        # wander into a region where births are impossible — hold it instead
+        sigma_a = jnp.where(k_plus > 0, jnp.sqrt(sa2), gs.sigma_a)
+    else:
+        sigma_x, sigma_a = gs.sigma_x, gs.sigma_a
+    if hyp.resample_alpha:
+        HN = ibm.harmonic(int(N_global))
+        alpha = ibm.gamma_draw(k_al, hyp.a_alpha + k_plus, hyp.b_alpha + HN)
+    else:
+        alpha = gs.alpha
+    p_prime = jax.random.randint(k_pp, (), 0, P_)
+    return sigma_x, sigma_a, alpha, p_prime
+
+
+# --------------------------------------------------------------------------
+# driver 1: vmap-simulated shards (single device; benchmarks/tests)
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend"))
+def hybrid_iteration_vmap(
+    X_shards: Array,            # (P, N_p, D)
+    gs: HybridGlobal,
+    ss: HybridShard,
+    hyp,
+    L: int = 5,
+    N_global: int = 0,
+    backend: str = "jnp",
+) -> tuple[HybridGlobal, HybridShard]:
+    P_, N_p, D = X_shards.shape
+    N_g = float(N_global if N_global else P_ * N_p)
+
+    sub = partial(
+        shard_sub_iterations, N_global=N_g, L=L, backend=backend
+    )
+    Z, Z_tail, tail_active = jax.vmap(
+        sub, in_axes=(0, 0, 0, 0, None, 0)
+    )(X_shards, ss.Z, ss.Z_tail, ss.tail_active, gs, jnp.arange(P_))
+
+    # ---- master sync (simulated psum = sum over shard axis)
+    tail_g = jnp.sum(tail_active, axis=0)  # only p' is nonzero
+    Z, active_new, n_drop = jax.vmap(
+        promote_tail, in_axes=(0, 0, None, None)
+    )(Z, Z_tail, tail_g, gs.active)
+    active_new = active_new[0]  # identical across shards
+    n_drop = n_drop[0]
+
+    stats = jax.vmap(local_stats)(X_shards, Z)
+    stats = jax.tree.map(lambda x: jnp.sum(x, axis=0), stats)
+    A, pi, active, m = master_step1(stats, active_new, gs, N_g, D)
+    Z = Z * active[None, None, :]
+
+    sse = jnp.sum(jax.vmap(local_sse, in_axes=(0, 0, None, None))(
+        X_shards, Z, A, active
+    ))
+    sigma_x, sigma_a, alpha, p_prime = master_step2(
+        sse, A, active, gs, hyp, N_g, D, P_
+    )
+
+    gs_new = HybridGlobal(
+        A=A, pi=pi, active=active, alpha=alpha,
+        sigma_x=sigma_x, sigma_a=sigma_a,
+        key=jax.random.fold_in(gs.key, 7),
+        p_prime=p_prime, it=gs.it + 1,
+        overflow=gs.overflow + n_drop,
+    )
+    ss_new = HybridShard(
+        Z=Z,
+        Z_tail=jnp.zeros_like(ss.Z_tail),
+        tail_active=jnp.zeros_like(ss.tail_active),
+    )
+    return gs_new, ss_new
+
+
+# --------------------------------------------------------------------------
+# driver 2: shard_map over a mesh (the production path)
+# --------------------------------------------------------------------------
+
+
+def make_hybrid_iteration_shardmap(
+    mesh,
+    data_axes: tuple[str, ...],
+    hyp,
+    L: int = 5,
+    N_global: int = 0,
+    backend: str = "jnp",
+    sync: str = "staged",
+):
+    """Build a jitted hybrid iteration sharded over ``data_axes`` of ``mesh``.
+
+    X: (N, D) sharded over rows; Z likewise; tail buffers (P, K_tail) with the
+    leading shard axis; global params replicated.
+
+    ``sync`` selects the master-sync schedule (§Perf cell 3):
+
+    * ``"staged"`` — three sequential all-reduces (tail mask -> promote ->
+      (m, ZtZ, ZtX) -> draw A -> sse), a direct transliteration of the
+      paper's "send summary statistics to the master" with the broadcast
+      folded away by the replicated-master trick.
+    * ``"fused"`` — ONE all-reduce. Exactness-preserving rewrites: (i) each
+      shard computes its local stats with its OWN tail pre-scattered (zero
+      columns everywhere except p', so the reduced stats equal the staged
+      post-promotion stats); (ii) the residual SSE comes from the identity
+      ||X - Z A||^2 = tr(X^T X) - 2<A, Z^T X> + <A, (Z^T Z) A>, evaluated
+      from the already-reduced stats — no second reduction; (iii) the tail
+      mask and tr(X^T X) ride in the same flattened payload. At the paper's
+      statistics sizes (K <= 64) the sync is latency-bound, so collective
+      COUNT, not bytes, is the cost — 3x fewer round trips.
+    """
+    import numpy as np
+
+    axis_sizes = [mesh.shape[a] for a in data_axes]
+    P_ = int(np.prod(axis_sizes))
+
+    def step(X, gs: HybridGlobal, Z, Z_tail, tail_active):
+        N, D = X.shape
+        N_g = float(N_global if N_global else N)
+
+        def finish(gs, A, pi, active, sse, n_drop, Zt_p, ta_p):
+            sigma_x, sigma_a, alpha, p_prime = master_step2(
+                sse, A, active, gs, hyp, N_g, D, P_
+            )
+            gs_new = HybridGlobal(
+                A=A, pi=pi, active=active, alpha=alpha,
+                sigma_x=sigma_x, sigma_a=sigma_a,
+                key=jax.random.fold_in(gs.key, 7),
+                p_prime=p_prime, it=gs.it + 1,
+                overflow=gs.overflow + n_drop,
+            )
+            return gs_new, jnp.zeros_like(Zt_p), jnp.zeros_like(ta_p)
+
+        def shard_fn_staged(X_p, gs, Z_p, Zt_p, ta_p):
+            ta = ta_p[0]  # (1, K_tail) local block -> (K_tail,)
+            idx = jax.lax.axis_index(data_axes)
+            Z_p, Zt_p2, ta = shard_sub_iterations(
+                X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, backend
+            )
+            tail_g = jax.lax.psum(ta, data_axes)                    # AR 1
+            Z_p, active_new, n_drop = promote_tail(Z_p, Zt_p2, tail_g, gs.active)
+            stats = local_stats(X_p, Z_p)
+            stats = jax.lax.psum(stats, data_axes)                  # AR 2
+            A, pi, active, m = master_step1(stats, active_new, gs, N_g, D)
+            Z_p = Z_p * active[None, :]
+            sse = jax.lax.psum(                                      # AR 3
+                local_sse(X_p, Z_p, A, active), data_axes)
+            gs_new, Zt0, ta0 = finish(gs, A, pi, active, sse, n_drop,
+                                      Zt_p, ta_p)
+            return gs_new, Z_p, Zt0, ta0
+
+        def shard_fn_fused(X_p, gs, Z_p, Zt_p, ta_p):
+            ta = ta_p[0]
+            idx = jax.lax.axis_index(data_axes)
+            Z_p, Zt_p2, ta = shard_sub_iterations(
+                X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, backend
+            )
+            K_max = Z_p.shape[1]
+            K_tail = ta.shape[0]
+            # local stats WITH own tail pre-scattered (non-p' adds zeros;
+            # p' uses the same deterministic slot assignment every shard
+            # re-derives after the reduce)
+            Z_stats, _, _ = promote_tail(Z_p, Zt_p2, ta, gs.active)
+            stats = local_stats(X_p, Z_stats)
+            payload = jnp.concatenate([
+                stats["ZtZ"].reshape(-1),
+                stats["ZtX"].reshape(-1),
+                stats["m"],
+                ta,
+                jnp.sum(X_p * X_p)[None],
+            ])
+            g = jax.lax.psum(payload, data_axes)                    # AR (only)
+            o1 = K_max * K_max
+            o2 = o1 + K_max * X_p.shape[1]
+            ZtZ = g[:o1].reshape(K_max, K_max)
+            ZtX = g[o1:o2].reshape(K_max, X_p.shape[1])
+            m_g = g[o2:o2 + K_max]
+            tail_g = g[o2 + K_max:o2 + K_max + K_tail]
+            xx = g[-1]
+            Z_p, active_new, n_drop = promote_tail(Z_p, Zt_p2, tail_g,
+                                                   gs.active)
+            A, pi, active, m = master_step1(
+                {"m": m_g, "ZtZ": ZtZ, "ZtX": ZtX}, active_new, gs, N_g, D
+            )
+            Z_p = Z_p * active[None, :]
+            # SSE identity — exact, no second reduction
+            ZtXm = ZtX * active[:, None]
+            ZtZm = ZtZ * ibm.mask_outer(active)
+            sse = xx - 2.0 * jnp.sum(A * ZtXm) + jnp.sum(A * (ZtZm @ A))
+            gs_new, Zt0, ta0 = finish(gs, A, pi, active, sse, n_drop,
+                                      Zt_p, ta_p)
+            return gs_new, Z_p, Zt0, ta0
+
+        shard_fn = shard_fn_fused if sync == "fused" else shard_fn_staged
+        shard_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+        gspec = jax.tree.map(lambda _: P(), gs)
+        return jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(shard_spec, gspec, shard_spec, shard_spec, shard_spec),
+            out_specs=(gspec, shard_spec, shard_spec, shard_spec),
+            check_vma=False,
+        )(X, gs, Z, Z_tail, tail_active)
+
+    return jax.jit(step)

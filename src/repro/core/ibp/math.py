@@ -1,0 +1,165 @@
+"""Linear-Gaussian IBP math: marginal likelihoods, conjugate posteriors, rank updates.
+
+Model (paper Eq. 1):
+    X = Z A + eps,   eps ~ N(0, sigma_x^2 I),   A_k ~ N(0, sigma_a^2 I)
+
+All feature-indexed buffers are padded to a static ``K_max``; an ``active``
+mask (float {0,1}) selects live columns.  Inactive rows/cols are arranged so
+that padded linear algebra (Cholesky of W) is exact: the padded W gets unit
+diagonal / zero off-diagonal in inactive slots, contributing 0 to logdet and
+nothing to the trace term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+LOG2PI = float(jnp.log(2.0 * jnp.pi))
+
+
+def mask_outer(active: Array) -> Array:
+    """(K,K) mask with 1 where both row & col active."""
+    return active[:, None] * active[None, :]
+
+
+def padded_W(ZtZ: Array, active: Array, ratio: Array) -> Array:
+    """W = ZtZ + ratio*I on active block; identity on inactive block.
+
+    ratio = sigma_x^2 / sigma_a^2.
+    """
+    K = ZtZ.shape[0]
+    m2 = mask_outer(active)
+    W = ZtZ * m2 + ratio * jnp.eye(K) * active[:, None] * active[None, :]
+    # inactive diagonal -> 1 so chol / logdet are well defined and contribute 0
+    W = W + jnp.eye(K) * (1.0 - active)
+    return W
+
+
+def chol_inv_logdet(W: Array) -> tuple[Array, Array]:
+    """Return (W^{-1}, logdet W) via Cholesky. W must be SPD."""
+    L = jnp.linalg.cholesky(W)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(L)))
+    eye = jnp.eye(W.shape[0], dtype=W.dtype)
+    Linv = jax.scipy.linalg.solve_triangular(L, eye, lower=True)
+    Winv = Linv.T @ Linv
+    return Winv, logdet
+
+
+def collapsed_loglik(
+    trXtX: Array,
+    ZtX: Array,
+    ZtZ: Array,
+    active: Array,
+    N: Array,
+    D: int,
+    sigma_x: Array,
+    sigma_a: Array,
+) -> Array:
+    """log P(X | Z) with A integrated out (paper Sec. 2 / G&G 2011 Eq. 26).
+
+    log P = -(N D / 2) log(2 pi) - (N - K) D log sigma_x - K D log sigma_a
+            - (D/2) log|W| - (1 / 2 sigma_x^2) ( tr(X^T X) - tr(X^T Z M Z^T X) )
+    with W = Z^T Z + (sigma_x^2/sigma_a^2) I,  M = W^{-1}.
+
+    All feature inputs are K_max padded + masked by ``active``.
+    """
+    ratio = (sigma_x / sigma_a) ** 2
+    K = jnp.sum(active)
+    W = padded_W(ZtZ, active, ratio)
+    M, logdetW = chol_inv_logdet(W)
+    ZtX_m = ZtX * active[:, None]
+    quad = jnp.sum((M @ ZtX_m) * ZtX_m)  # tr( (ZtX)^T M (ZtX) )
+    Nf = N.astype(jnp.float32) if hasattr(N, "astype") else jnp.float32(N)
+    return (
+        -0.5 * Nf * D * LOG2PI
+        - (Nf - K) * D * jnp.log(sigma_x)
+        - K * D * jnp.log(sigma_a)
+        - 0.5 * D * logdetW
+        - 0.5 / (sigma_x**2) * (trXtX - quad)
+    )
+
+
+def sm_downdate(M: Array, z: Array) -> tuple[Array, Array]:
+    """Sherman-Morrison removal: M' = (W - z z^T)^{-1} given M = W^{-1}.
+
+    Returns (M', log det(W - z z^T) - log det W) = (M', log(1 - z^T M z)).
+    """
+    Mz = M @ z
+    denom = 1.0 - jnp.dot(z, Mz)
+    return M + jnp.outer(Mz, Mz) / denom, jnp.log(denom)
+
+
+def sm_update(M: Array, z: Array) -> tuple[Array, Array]:
+    """Sherman-Morrison addition: M' = (W + z z^T)^{-1}; logdet delta = log(1+z^T M z)."""
+    Mz = M @ z
+    denom = 1.0 + jnp.dot(z, Mz)
+    return M - jnp.outer(Mz, Mz) / denom, jnp.log(denom)
+
+
+def a_posterior(
+    ZtZ: Array,
+    ZtX: Array,
+    active: Array,
+    sigma_x: Array,
+    sigma_a: Array,
+) -> tuple[Array, Array]:
+    """Posterior of A | Z, X: mean = M Z^T X, per-column covariance sigma_x^2 M.
+
+    Returns (mean (K,D) masked, M (K,K) masked+identity-padded).
+    """
+    ratio = (sigma_x / sigma_a) ** 2
+    W = padded_W(ZtZ, active, ratio)
+    M, _ = chol_inv_logdet(W)
+    M = M * mask_outer(active)  # zero inactive cross terms for the draw
+    mean = (M @ (ZtX * active[:, None])) * active[:, None]
+    return mean, M
+
+
+def a_posterior_draw(
+    key: Array,
+    ZtZ: Array,
+    ZtX: Array,
+    active: Array,
+    sigma_x: Array,
+    sigma_a: Array,
+) -> Array:
+    """Draw A ~ P(A | Z, X). Columns of A are iid N(mean_d, sigma_x^2 M)."""
+    mean, M = a_posterior(ZtZ, ZtX, active, sigma_x, sigma_a)
+    K = ZtZ.shape[0]
+    D = ZtX.shape[1]
+    # chol of sigma_x^2 M with identity padding on inactive block
+    Mp = M + jnp.eye(K) * (1.0 - active)
+    L = jnp.linalg.cholesky(Mp)
+    eps = jax.random.normal(key, (K, D), dtype=ZtX.dtype)
+    draw = mean + sigma_x * ((L @ eps) * active[:, None])
+    return draw
+
+
+def uncollapsed_loglik(X: Array, Z: Array, A: Array, sigma_x: Array) -> Array:
+    """log N(X | Z A, sigma_x^2 I), summed over all entries."""
+    R = X - Z @ A
+    n = X.size
+    return -0.5 * n * LOG2PI - n * jnp.log(sigma_x) - 0.5 * jnp.sum(R * R) / sigma_x**2
+
+
+def z_prior_loglik(Z: Array, pi: Array, active: Array) -> Array:
+    """sum_k sum_n log Bernoulli(Z_nk | pi_k) over active features."""
+    p = jnp.clip(pi, 1e-6, 1.0 - 1e-6)
+    ll = Z * jnp.log(p)[None, :] + (1.0 - Z) * jnp.log1p(-p)[None, :]
+    return jnp.sum(ll * active[None, :])
+
+
+def harmonic(N: int) -> float:
+    return float(sum(1.0 / i for i in range(1, N + 1)))
+
+
+def inverse_gamma_draw(key: Array, shape_param: Array, rate_param: Array) -> Array:
+    """X ~ InvGamma(a, b) via 1 / Gamma(a, rate=b) (jax gamma is shape-only, scale 1)."""
+    g = jax.random.gamma(key, shape_param) / rate_param
+    return 1.0 / g
+
+
+def gamma_draw(key: Array, shape_param: Array, rate_param: Array) -> Array:
+    return jax.random.gamma(key, shape_param) / rate_param

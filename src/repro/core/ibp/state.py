@@ -1,0 +1,92 @@
+"""IBP sampler state pytrees and initialization."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IBPHypers:
+    """Fixed hyper-hyper parameters (priors). Static pytree leaves (floats)."""
+
+    a_alpha: float = 1.0   # Gamma prior on alpha (shape)
+    b_alpha: float = 1.0   # Gamma prior on alpha (rate)
+    a_sx: float = 1.0      # InvGamma prior on sigma_x^2
+    b_sx: float = 1.0
+    a_sa: float = 1.0      # InvGamma prior on sigma_a^2
+    b_sa: float = 1.0
+    resample_sigmas: bool = dataclasses.field(default=True, metadata={"static": True})
+    resample_alpha: bool = dataclasses.field(default=True, metadata={"static": True})
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class IBPState:
+    """Global (replicated) + sharded state of the hybrid sampler.
+
+    Z is sharded along axis 0 (observations); all feature-indexed buffers are
+    padded to K_max. ``active`` marks instantiated (K+) features; ``tail``
+    marks shard-local uninstantiated features being explored by processor p'.
+    """
+
+    Z: Array            # (N[_p], K_max) float {0,1}
+    A: Array            # (K_max, D)
+    pi: Array           # (K_max,)
+    active: Array       # (K_max,) float {0,1}   instantiated features K+
+    tail: Array         # (K_max,) float {0,1}   p'-local tail features K*
+    alpha: Array        # ()
+    sigma_x: Array      # ()
+    sigma_a: Array      # ()
+    key: Array          # PRNG key (shared; shards fold in their index)
+    p_prime: Array      # () int32 — which shard owns the collapsed tail
+    it: Array           # () int32 — iteration counter
+
+    @property
+    def k_plus(self) -> Array:
+        return jnp.sum(self.active).astype(jnp.int32)
+
+    @property
+    def k_max(self) -> int:
+        return self.Z.shape[1]
+
+
+def init_state(
+    key: Array,
+    N: int,
+    D: int,
+    K_max: int,
+    alpha: float = 3.0,
+    sigma_x: float = 1.0,
+    sigma_a: float = 1.0,
+    K_init: int = 1,
+    dtype: Any = jnp.float32,
+) -> IBPState:
+    """Start with K_init random singleton-ish features."""
+    k0, k1, k2 = jax.random.split(key, 3)
+    Z = jnp.zeros((N, K_max), dtype)
+    Z = Z.at[:, :K_init].set(
+        jax.random.bernoulli(k0, 0.5, (N, K_init)).astype(dtype)
+    )
+    A = jnp.zeros((K_max, D), dtype)
+    A = A.at[:K_init].set(jax.random.normal(k1, (K_init, D), dtype) * sigma_a)
+    active = jnp.zeros((K_max,), dtype).at[:K_init].set(1.0)
+    pi = jnp.zeros((K_max,), dtype).at[:K_init].set(0.5)
+    return IBPState(
+        Z=Z,
+        A=A,
+        pi=pi,
+        active=active,
+        tail=jnp.zeros((K_max,), dtype),
+        alpha=jnp.asarray(alpha, dtype),
+        sigma_x=jnp.asarray(sigma_x, dtype),
+        sigma_a=jnp.asarray(sigma_a, dtype),
+        key=k2,
+        p_prime=jnp.asarray(0, jnp.int32),
+        it=jnp.asarray(0, jnp.int32),
+    )

@@ -1,0 +1,63 @@
+"""Fully uncollapsed Gibbs sampler (finite beta-Bernoulli approximation).
+
+The paper's 'poor mixing' baseline: instantiate pi and A for a finite K
+truncation (Eq. 2), sweep Z | pi, A, then conjugate draws for pi, A, sigmas.
+Trivially parallelizable but slow to instantiate good new features — included
+for completeness and for ablation benchmarks.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import math as ibm
+from .state import IBPHypers, IBPState
+from .sweeps import uncollapsed_sweep
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("hyp",))
+def uncollapsed_step(state: IBPState, X: Array, hyp: IBPHypers) -> IBPState:
+    """One iteration: Z | pi,A ; A | Z,X ; pi | Z (finite Beta(alpha/K, 1)); hypers."""
+    N, D = X.shape
+    K = state.Z.shape[1]
+    active = jnp.ones((K,), X.dtype)  # finite model: all K columns live
+    key, kz, ka, kpi, ksx, ksa, kal = jax.random.split(state.key, 7)
+
+    Z = uncollapsed_sweep(X, state.Z, state.A, state.pi, active, state.sigma_x, kz)
+
+    m = jnp.sum(Z, axis=0)
+    ZtZ = Z.T @ Z
+    ZtX = Z.T @ X
+    A = ibm.a_posterior_draw(ka, ZtZ, ZtX, active, state.sigma_x, state.sigma_a)
+
+    # finite-model posterior: pi_k ~ Beta(alpha/K + m_k, 1 + N - m_k)
+    pi = jax.random.beta(kpi, state.alpha / K + m, 1.0 + N - m)
+
+    sigma_x, sigma_a, alpha = state.sigma_x, state.sigma_a, state.alpha
+    if hyp.resample_sigmas:
+        sse = jnp.sum((X - Z @ A) ** 2)
+        sigma_x = jnp.sqrt(
+            ibm.inverse_gamma_draw(ksx, hyp.a_sx + 0.5 * N * D, hyp.b_sx + 0.5 * sse)
+        )
+        sigma_a = jnp.sqrt(
+            ibm.inverse_gamma_draw(
+                ksa, hyp.a_sa + 0.5 * K * D, hyp.b_sa + 0.5 * jnp.sum(A * A)
+            )
+        )
+    if hyp.resample_alpha:
+        # finite-model conjugate: alpha ~ Gamma(a + K_active-ish, b + H_N);
+        # we use the standard IBP form with K+ = #columns with m_k > 0
+        k_plus = jnp.sum(m > 0.5)
+        alpha = ibm.gamma_draw(
+            kal, hyp.a_alpha + k_plus, hyp.b_alpha + ibm.harmonic(N)
+        )
+
+    return IBPState(
+        Z=Z, A=A, pi=pi, active=active, tail=state.tail,
+        alpha=alpha, sigma_x=sigma_x, sigma_a=sigma_a, key=key,
+        p_prime=state.p_prime, it=state.it + 1,
+    )

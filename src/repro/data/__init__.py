@@ -1,0 +1,10 @@
+from .cambridge import cambridge_data, CAMBRIDGE_FEATURES
+from .sharding import shard_rows, unshard_rows, train_eval_split
+
+__all__ = [
+    "cambridge_data",
+    "CAMBRIDGE_FEATURES",
+    "shard_rows",
+    "unshard_rows",
+    "train_eval_split",
+]

@@ -1,0 +1,13 @@
+from . import ops, ref
+from .kernel import feature_stats_pallas
+from .ops import feature_stats, feature_stats_core
+from .ref import feature_stats_ref
+
+__all__ = [
+    "ops",
+    "ref",
+    "feature_stats",
+    "feature_stats_core",
+    "feature_stats_pallas",
+    "feature_stats_ref",
+]

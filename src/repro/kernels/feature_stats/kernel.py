@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused sufficient-statistics Gram accumulation.
+
+The hybrid sampler's master sync needs (ZtZ, ZtX, m) — three reductions over
+the same (N_p, ·) operands. Fusing them into one grid pass reads Z and X from
+HBM exactly once (beyond-paper optimization #2 in DESIGN.md §7); unfused XLA
+emits three GEMM/reduce ops each re-streaming Z.
+
+Accumulation pattern: every grid step maps to the same output block; step 0
+initializes, later steps add. Output stays in VMEM for the whole grid walk
+(K·K + K·D + K floats ≪ VMEM).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 512
+
+
+def _kernel(x_ref, z_ref, ztz_ref, ztx_ref, m_ref):
+    zb = z_ref[...]   # (BN, K)
+    xb = x_ref[...]   # (BN, D)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        ztz_ref[...] = jnp.zeros_like(ztz_ref)
+        ztx_ref[...] = jnp.zeros_like(ztx_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    ztz_ref[...] += jnp.dot(zb.T, zb, preferred_element_type=jnp.float32)
+    ztx_ref[...] += jnp.dot(zb.T, xb, preferred_element_type=jnp.float32)
+    m_ref[...] += jnp.sum(zb, axis=0, keepdims=True)
+
+
+def feature_stats_pallas(
+    X: jax.Array,
+    Z: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    N, D = X.shape
+    K = Z.shape[1]
+    assert N % block_n == 0, (N, block_n)
+    grid = (N // block_n,)
+
+    ztz, ztx, m = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, K), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((K, K), lambda i: (0, 0)),
+            pl.BlockSpec((K, D), lambda i: (0, 0)),
+            pl.BlockSpec((1, K), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, K), jnp.float32),
+            jax.ShapeDtypeStruct((K, D), jnp.float32),
+            jax.ShapeDtypeStruct((1, K), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X.astype(jnp.float32), Z.astype(jnp.float32))
+    return ztz, ztx, m[0]

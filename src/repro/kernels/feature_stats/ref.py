@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: the master-sync sufficient statistics in one definition."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def feature_stats_ref(X: Array, Z: Array) -> tuple[Array, Array, Array]:
+    """Returns (ZtZ (K,K), ZtX (K,D), m (K,))."""
+    Zf = Z.astype(jnp.float32)
+    Xf = X.astype(jnp.float32)
+    return Zf.T @ Zf, Zf.T @ Xf, jnp.sum(Zf, axis=0)

@@ -1,0 +1,13 @@
+from . import ops, ref
+from .kernel import gaussian_sse_pallas
+from .ops import gaussian_sse, gaussian_sse_core
+from .ref import gaussian_sse_ref
+
+__all__ = [
+    "ops",
+    "ref",
+    "gaussian_sse",
+    "gaussian_sse_core",
+    "gaussian_sse_pallas",
+    "gaussian_sse_ref",
+]

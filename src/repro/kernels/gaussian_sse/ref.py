@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: masked residual sum of squares ||X - (Z*active) A||^2."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def gaussian_sse_ref(X: Array, Z: Array, A: Array, active: Array) -> Array:
+    Xf = X.astype(jnp.float32)
+    Zf = Z.astype(jnp.float32) * active.astype(jnp.float32)[None, :]
+    R = Xf - Zf @ A.astype(jnp.float32)
+    return jnp.sum(R * R)

@@ -1,0 +1,13 @@
+from . import ops, ref
+from .kernel import gibbs_flip_pallas
+from .ops import gibbs_flip, gibbs_flip_core
+from .ref import gibbs_flip_ref
+
+__all__ = [
+    "ops",
+    "ref",
+    "gibbs_flip",
+    "gibbs_flip_core",
+    "gibbs_flip_pallas",
+    "gibbs_flip_ref",
+]

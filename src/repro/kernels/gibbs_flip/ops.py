@@ -1,0 +1,75 @@
+"""Jitted public wrapper for the gibbs_flip kernel.
+
+Handles padding to the row-block size, dtype policy (compute f32, return the
+input Z dtype), drawing the logit-uniform slab from a PRNG key, and backend
+selection (Pallas compiled on TPU, interpret=True elsewhere — this container
+is CPU-only so interpret mode is the validation path).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_N, gibbs_flip_pallas
+
+Array = jax.Array
+
+
+def _logit(p: Array) -> Array:
+    p = jnp.clip(p, 1e-6, 1.0 - 1e-6)
+    return jnp.log(p) - jnp.log1p(-p)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gibbs_flip_core(
+    X: Array,
+    Z: Array,
+    A: Array,
+    logit_pi: Array,
+    active: Array,
+    u_logit: Array,
+    inv2s2: Array,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+) -> Array:
+    N, D = X.shape
+    K = Z.shape[1]
+    bn = min(block_n, max(8, N))
+    pad = (-N) % bn
+    if pad:
+        Xp = jnp.pad(X, ((0, pad), (0, 0)))
+        Zp = jnp.pad(Z, ((0, pad), (0, 0)))
+        # padded rows: force "keep current bit (0)" by +inf logit-uniforms
+        up = jnp.pad(u_logit, ((0, pad), (0, 0)), constant_values=1e30)
+    else:
+        Xp, Zp, up = X, Z, u_logit
+    out = gibbs_flip_pallas(
+        Xp, Zp, A, logit_pi, active, up, inv2s2,
+        block_n=bn, interpret=interpret,
+    )
+    return out[:N].astype(Z.dtype)
+
+
+def gibbs_flip(
+    X: Array,
+    Z: Array,
+    A: Array,
+    pi: Array,
+    active: Array,
+    sigma_x: Array,
+    key: Array,
+    block_n: int = DEFAULT_BLOCK_N,
+) -> Array:
+    """Drop-in replacement for sweeps.uncollapsed_sweep (backend='pallas')."""
+    u = _logit(jax.random.uniform(key, Z.shape, dtype=jnp.float32))
+    inv2s2 = 0.5 / (sigma_x.astype(jnp.float32) ** 2)
+    return gibbs_flip_core(
+        X, Z, A, _logit(pi), active, u, inv2s2,
+        block_n=block_n, interpret=not _on_tpu(),
+    )

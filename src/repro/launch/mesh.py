@@ -1,0 +1,9 @@
+"""Production mesh entry point (launch-facing re-export).
+
+``make_production_mesh(multi_pod=False)`` -> (16, 16) ("data", "model");
+``multi_pod=True`` -> (2, 16, 16) ("pod", "data", "model"). A function, not a
+module-level constant: importing this module never touches jax device state.
+"""
+from repro.parallel.mesh import make_production_mesh, mesh_axes
+
+__all__ = ["make_production_mesh", "mesh_axes"]

@@ -1,0 +1,65 @@
+"""Batched serving launcher: prefill + decode loop with KV caches.
+
+Usage (CPU demo):
+  python -m repro.launch.serve --arch smollm-135m --smoke --batch 4 --new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import (
+    init_caches,
+    init_model,
+    make_decode_step,
+)
+from repro.models.transformer import model_apply
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params, _ = init_model(jax.random.key(args.seed), cfg)
+    B, S = args.batch, args.prompt_len
+    prompt = jax.random.randint(
+        jax.random.key(1), (B, S), 0, cfg.vocab, jnp.int32
+    )
+
+    # prefill: run the prompt through the decode path to warm the cache
+    # (single-step decode per position keeps one code path; batched prefill
+    # is exercised by the dry-run prefill cells)
+    caches = init_caches(cfg, B, S + args.new)
+    decode = jax.jit(make_decode_step(cfg))
+    extras = {}
+    if cfg.family == "encdec":
+        extras["enc_out"] = jnp.zeros((B, cfg.enc_seq, cfg.d_model),
+                                      jnp.float32)
+    t0 = time.time()
+    tok = prompt[:, :1]
+    out = [tok]
+    for i in range(S + args.new - 1):
+        nxt, caches = decode(params, {"tokens": tok, **extras}, caches)
+        tok = jnp.where(i + 1 < S, prompt[:, i + 1:i + 2], nxt[:, None])
+        out.append(tok)
+    seq = jnp.concatenate(out, axis=1)
+    dt = time.time() - t0
+    print(f"generated {B}x{args.new} tokens in {dt:.2f}s "
+          f"({B * (S + args.new) / dt:.1f} tok/s inc. prefill)")
+    print("sample:", seq[0, -args.new:].tolist())
+    return seq
+
+
+if __name__ == "__main__":
+    main()

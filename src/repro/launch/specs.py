@@ -1,0 +1,68 @@
+"""Abstract input/param/cache specs per (arch x shape) cell — ShapeDtypeStruct
+stand-ins only, no device allocation (the dry-run contract)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.models import init_caches, init_model
+
+Struct = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Struct]:
+    """Model inputs for one step, as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if shape.mode == "train":
+        batch = {
+            "tokens": Struct((B, S), i32),
+            "labels": Struct((B, S), i32),
+        }
+    elif shape.mode == "prefill":
+        batch = {"tokens": Struct((B, S), i32)}
+    else:  # decode: one new token against an S-long cache
+        batch = {"tokens": Struct((B, 1), i32)}
+    if cfg.family == "encdec":
+        if shape.mode == "decode":
+            # encoder ran at prefill; serving passes its output
+            batch["enc_out"] = Struct((B, cfg.enc_seq, cfg.d_model), act)
+        else:
+            batch["frames"] = Struct((B, cfg.enc_seq, cfg.d_model), act)
+    if cfg.family == "vlm" and shape.mode != "decode":
+        batch["patches"] = Struct((B, cfg.stub_tokens, cfg.d_model), act)
+    return batch
+
+
+def abstract_model(cfg: ModelConfig, *, serve: bool = False):
+    """(param structs, pspec tree) without allocating anything."""
+    holder: dict[str, Any] = {}
+
+    def build(key):
+        p, s = init_model(key, cfg)
+        holder["specs"] = s
+        return p
+
+    pstruct = jax.eval_shape(build, jax.random.key(0))
+    if serve:  # deployed weights are bf16
+        pstruct = jax.tree.map(
+            lambda s: Struct(s.shape, jnp.bfloat16)
+            if s.dtype == jnp.float32 else s,
+            pstruct,
+        )
+    return pstruct, holder["specs"]
+
+
+def abstract_caches(cfg: ModelConfig, B: int, S: int):
+    return jax.eval_shape(lambda: init_caches(cfg, B, S))
+
+
+def param_bytes(pstruct, bytes_per_el: int = 2) -> int:
+    return sum(
+        int(jnp.prod(jnp.array(x.shape))) * bytes_per_el
+        for x in jax.tree.leaves(pstruct)
+    )

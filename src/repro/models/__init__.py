@@ -1,0 +1,29 @@
+from .transformer import (
+    ActSpecs,
+    init_caches,
+    init_model,
+    model_apply,
+    pad_vocab,
+)
+from .lm import (
+    cross_entropy,
+    greedy_generate,
+    lm_loss,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = [
+    "ActSpecs",
+    "init_caches",
+    "init_model",
+    "model_apply",
+    "pad_vocab",
+    "cross_entropy",
+    "greedy_generate",
+    "lm_loss",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_step",
+]

@@ -1,0 +1,372 @@
+"""Attention flavors: GQA/MHA, MLA (DeepSeek/MiniCPM), local-window (RG).
+
+Shapes: activations (B, S, d). Projections are flattened-feature GEMMs with
+TP sharding constraints on the flattened dim (always divisible by the model
+axis for the assigned archs — see DESIGN.md §6); 4-D internals are left to
+the SPMD partitioner.
+
+Prefill/train uses flash-style chunked attention (lax.scan over KV chunks
+with online softmax) so the S x S score matrix never materializes. Decode is
+a single-token read over a static-length cache. MLA decode uses the
+*absorbed-weights* form (q projected into the latent space, context read in
+latent space) — the KV cache is (kv_lora + rope) wide instead of
+2 * H * hd (a beyond-paper serving optimization; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .modules import FSDP, TP, linear_init, rope, maybe_shard, sp_out_proj
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: Array          # (B, S_cache, KV, hd)  — GQA; MLA: c_kv (B, S, r)
+    v: Array          # (B, S_cache, KV, hd)  — GQA; MLA: k_rope (B, S, rd)
+    length: Array     # () int32 — valid prefix length
+
+
+def _shard(x: Array, spec) -> Array:
+    return maybe_shard(x, spec)
+
+
+# --------------------------------------------------------------------------
+# chunked (flash-style) softmax attention
+# --------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: Array,             # (B, Sq, KV, G, hd)
+    k: Array,             # (B, Sk, KV, hd)
+    v: Array,             # (B, Sk, KV, hd)
+    *,
+    chunk: int,
+    causal: bool,
+    q_offset: Array | int = 0,   # position of q[0] in the kv timeline
+    window: int = 0,             # 0 = global
+) -> Array:
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(Sq) + q_offset  # (Sq,)
+
+    def body(carry, j):
+        m, l, acc = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+        s = jnp.einsum(
+            "bqkgh,bckh->bkgqc", qf, kj.astype(jnp.float32)
+        )  # (B, KV, G, Sq, C)
+        k_pos = j * chunk + jnp.arange(chunk)
+        valid = k_pos[None, :] < Sk
+        if causal:
+            valid = valid & (q_pos[:, None] >= k_pos[None, :])
+        if window:
+            valid = valid & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckh->bkgqh", p, vj.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    hd_v = v.shape[-1]  # may differ from q/k head dim (MLA: nope+rope vs v)
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B, KV, G, Sq, hd) -> (B, Sq, KV, G, hd)
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+def decode_attention(
+    q: Array,       # (B, 1, KV, G, hd)
+    k: Array,       # (B, S, KV, hd)
+    v: Array,       # (B, S, KV, hd)
+    length: Array,  # () valid cache length (new token at index length-1)
+    window: int = 0,
+) -> Array:
+    S = k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bqkgh,bckh->bkgqc", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    pos = jnp.arange(S)
+    valid = pos < length
+    if window:
+        valid = valid & (pos >= length - window)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckh->bkgqh", p, v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA block
+# --------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg, *, stack: int | None = None, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    params, specs = {}, {}
+    params["wq"], specs["wq"] = linear_init(ks[0], d, H * hd, stack=stack)
+    params["wk"], specs["wk"] = linear_init(ks[1], d, KV * hd, stack=stack)
+    params["wv"], specs["wv"] = linear_init(ks[2], d, KV * hd, stack=stack)
+    params["wo"], specs["wo"] = linear_init(
+        ks[3], H * hd, d, stack=stack, pspec=(TP, FSDP)
+    )
+    return params, specs
+
+
+def gqa_apply(
+    p: dict,
+    x: Array,                  # (B, S, d)
+    cfg,
+    *,
+    mode: str,                 # train | prefill | decode
+    positions: Array | None = None,
+    cache: KVCache | None = None,
+    kv_src: Array | None = None,   # cross-attention source (enc-dec)
+    window: int = 0,
+    act_spec=P(),
+    out_spec=P(),
+    kv_expand: bool = False,       # broadcast KV->H heads pre-attention so the
+                                   # flash carry shards cleanly over tp
+                                   # (§Perf iter 4: set when H%tp==0, KV%tp!=0)
+    full_specs=None,               # ActSpecs with mesh axes (§Perf iter 5)
+) -> tuple[Array, KVCache | None]:
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    src = x if kv_src is None else kv_src
+    q = _shard(jnp.einsum("bsd,df->bsf", x, p["wq"]), act_spec)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta)
+    q = q.reshape(B, S, KV, G, hd)
+
+    if mode == "decode":
+        assert cache is not None
+        k_new = jnp.einsum("bsd,df->bsf", src, p["wk"]).reshape(B, S, KV, hd)
+        v_new = jnp.einsum("bsd,df->bsf", src, p["wv"]).reshape(B, S, KV, hd)
+        k_new = rope(k_new, positions, cfg.rope_theta)
+        if window and cache.k.shape[1] == window:
+            # ring buffer (local attention): write at length % window
+            slot = cache.length % window
+            k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, 1)
+            # ring semantics: everything in the buffer is valid once warm
+            out = _ring_decode(q, k_cache, v_cache, cache.length + 1, window)
+            new_cache = KVCache(k_cache, v_cache, cache.length + 1)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k_new, cache.length, 1
+            )
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v_new, cache.length, 1
+            )
+            out = decode_attention(q, k_cache, v_cache, cache.length + 1, window)
+            new_cache = KVCache(k_cache, v_cache, cache.length + 1)
+    else:
+        if kv_src is None:
+            k = jnp.einsum("bsd,df->bsf", src, p["wk"]).reshape(B, S, KV, hd)
+            kv_pos = positions
+        else:
+            Sk = src.shape[1]
+            k = jnp.einsum("bsd,df->bsf", src, p["wk"]).reshape(B, Sk, KV, hd)
+            kv_pos = jnp.arange(Sk)[None, :]
+        k = rope(k, kv_pos, cfg.rope_theta)
+        v = jnp.einsum("bsd,df->bsf", src, p["wv"]).reshape(
+            B, src.shape[1], KV, hd
+        )
+        causal = kv_src is None and mode != "encode"
+        if kv_expand and G > 1:
+            # (B,S,KV,hd) -> (B,S,H,hd): head h = kv*G + g, matching q's
+            # reshape order. The (m,l,acc) flash carry then has a single
+            # H head-dim that shards over tp — avoids the SPMD
+            # replicate-then-repartition of the (KV,G) pair each chunk —
+            # and per-device KV bytes DROP (H/tp sharded < KV replicated).
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+            out = chunked_attention(
+                q.reshape(B, S, H, 1, hd), k, v,
+                chunk=cfg.attn_chunk, causal=causal, window=window,
+            ).reshape(B, S, KV, G, hd)
+        else:
+            out = chunked_attention(
+                q, k, v, chunk=cfg.attn_chunk, causal=causal, window=window
+            )
+        new_cache = None
+
+    out = out.reshape(B, S, H * hd)
+    if (full_specs is not None and mode == "train"
+            and len(out_spec) > 1 and out_spec[1] is not None):
+        # SP-sharded residual: reduce-scatter the partial sums explicitly
+        y = sp_out_proj(out, p["wo"].astype(out.dtype), full_specs, out_spec)
+    else:
+        y = _shard(jnp.einsum("bsf,fd->bsd", out, p["wo"]), out_spec)
+    return y, new_cache
+
+
+def _ring_decode(q, k, v, length, window):
+    """Decode attention over a ring buffer: all slots valid once length>=window."""
+    S = k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bqkgh,bckh->bkgqc", q.astype(jnp.float32) * scale, k.astype(jnp.float32)
+    )
+    pos = jnp.arange(S)
+    valid = jnp.where(length >= window, jnp.ones((S,), bool), pos < length)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bckh->bkgqh", p, v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLA block (DeepSeek-V2 / MiniCPM3)
+# --------------------------------------------------------------------------
+
+
+def mla_init(key, cfg, *, stack: int | None = None):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    r = cfg.kv_lora_rank
+    rd = cfg.qk_rope_dim
+    nd = cfg.qk_nope_dim or hd
+    ks = jax.random.split(key, 7)
+    params, specs = {}, {}
+    if cfg.q_lora_rank:
+        params["wdq"], specs["wdq"] = linear_init(
+            ks[0], d, cfg.q_lora_rank, stack=stack, pspec=(FSDP, None)
+        )
+        params["wuq"], specs["wuq"] = linear_init(
+            ks[1], cfg.q_lora_rank, H * (nd + rd), stack=stack
+        )
+    else:
+        params["wq"], specs["wq"] = linear_init(ks[1], d, H * (nd + rd), stack=stack)
+    params["wdkv"], specs["wdkv"] = linear_init(
+        ks[2], d, r, stack=stack, pspec=(FSDP, None)
+    )
+    params["wkr"], specs["wkr"] = linear_init(
+        ks[3], d, rd, stack=stack, pspec=(FSDP, None)
+    )
+    params["wuk"], specs["wuk"] = linear_init(ks[4], r, H * nd, stack=stack)
+    params["wuv"], specs["wuv"] = linear_init(ks[5], r, H * hd, stack=stack)
+    params["wo"], specs["wo"] = linear_init(
+        ks[6], H * hd, d, stack=stack, pspec=(TP, FSDP)
+    )
+    return params, specs
+
+
+def mla_apply(
+    p: dict,
+    x: Array,
+    cfg,
+    *,
+    mode: str,
+    positions: Array | None = None,
+    cache: KVCache | None = None,
+    act_spec=P(),
+    out_spec=P(),
+    full_specs=None,               # ActSpecs with mesh axes (§Perf iter 5)
+) -> tuple[Array, KVCache | None]:
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    r, rd = cfg.kv_lora_rank, cfg.qk_rope_dim
+    nd = cfg.qk_nope_dim or hd
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+
+    if cfg.q_lora_rank:
+        q = jnp.einsum("bsd,dr->bsr", x, p["wdq"])
+        q = _shard(jnp.einsum("bsr,rf->bsf", q, p["wuq"]), act_spec)
+    else:
+        q = _shard(jnp.einsum("bsd,df->bsf", x, p["wq"]), act_spec)
+    q = q.reshape(B, S, H, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    c_new = jnp.einsum("bsd,dr->bsr", x, p["wdkv"])       # latent KV
+    kr_new = rope(
+        jnp.einsum("bsd,dr->bsr", x, p["wkr"]), positions, cfg.rope_theta
+    )
+
+    if mode == "decode":
+        assert cache is not None
+        c = jax.lax.dynamic_update_slice_in_dim(cache.k, c_new, cache.length, 1)
+        kr = jax.lax.dynamic_update_slice_in_dim(cache.v, kr_new, cache.length, 1)
+        length = cache.length + 1
+        # absorbed form: score in latent space
+        wuk = p["wuk"].reshape(r, H, nd)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wuk)   # (B,1,H,r)
+        scale = (nd + rd) ** -0.5
+        s = (
+            jnp.einsum("bshr,bcr->bhsc", q_lat, c)
+            + jnp.einsum("bshr,bcr->bhsc", q_rope, kr)
+        ) * scale
+        pos = jnp.arange(c.shape[1])
+        s = jnp.where((pos < length)[None, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+        ctx = jnp.einsum("bhsc,bcr->bshr", w, c.astype(jnp.float32))  # latent ctx
+        wuv = p["wuv"].reshape(r, H, hd)
+        out = jnp.einsum("bshr,rhv->bshv", ctx.astype(x.dtype), wuv)
+        new_cache = KVCache(c, kr, length)
+    else:
+        k_nope = jnp.einsum("bsr,rf->bsf", c_new, p["wuk"]).reshape(B, S, H, nd)
+        v = jnp.einsum("bsr,rf->bsf", c_new, p["wuv"]).reshape(B, S, H, hd)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_new[:, :, None, :], (B, S, H, rd))],
+            axis=-1,
+        )
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(
+            qq.reshape(B, S, H, 1, nd + rd),
+            k,
+            v,
+            chunk=cfg.attn_chunk,
+            causal=True,
+        ).reshape(B, S, H, hd)
+        new_cache = None
+
+    out2 = out.reshape(B, S, H * hd)
+    if (full_specs is not None and mode == "train"
+            and len(out_spec) > 1 and out_spec[1] is not None):
+        y = sp_out_proj(out2, p["wo"].astype(out2.dtype), full_specs, out_spec)
+    else:
+        y = _shard(jnp.einsum("bsf,fd->bsd", out2, p["wo"]), out_spec)
+    return y, new_cache
+
+
+def init_gqa_cache(cfg, B: int, S: int, dtype, window: int = 0):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    Sc = min(S, window) if window else S
+    return KVCache(
+        k=jnp.zeros((B, Sc, KV, hd), dtype),
+        v=jnp.zeros((B, Sc, KV, hd), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_mla_cache(cfg, B: int, S: int, dtype):
+    return KVCache(
+        k=jnp.zeros((B, S, cfg.kv_lora_rank), dtype),
+        v=jnp.zeros((B, S, cfg.qk_rope_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

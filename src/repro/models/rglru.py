@@ -1,0 +1,140 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin), TPU-adapted.
+
+Recurrence (Griffin eq. 1-4):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    log a_t = -c * softplus(Lambda) * r_t             (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Same chunked-scan strategy as ssm.py but the state is only (B, d_rnn) — the
+per-chunk materialization is (B, Lc, d_rnn), tiny; hence the hybrid arch also
+runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .modules import FSDP, TP, linear_init, maybe_shard
+
+Array = jax.Array
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    conv: Array    # (B, conv_k - 1, d_rnn)
+    h: Array       # (B, d_rnn) f32
+    length: Array
+
+
+def rglru_init(key, cfg, *, stack: int | None = None):
+    d = cfg.d_model
+    dr = cfg.d_rnn or d
+    ks = jax.random.split(key, 7)
+    params, specs = {}, {}
+    params["in_x"], specs["in_x"] = linear_init(ks[0], d, dr, stack=stack)
+    params["in_gate"], specs["in_gate"] = linear_init(ks[1], d, dr, stack=stack)
+    conv_shape = (cfg.ssm_conv, dr) if stack is None else (stack, cfg.ssm_conv, dr)
+    params["conv_w"] = 0.1 * jax.random.normal(ks[2], conv_shape, jnp.float32)
+    specs["conv_w"] = P(*((None,) * (len(conv_shape) - 1) + (TP,)))
+    params["w_a"], specs["w_a"] = linear_init(ks[3], dr, dr, stack=stack,
+                                              pspec=(None, TP))
+    params["w_i"], specs["w_i"] = linear_init(ks[4], dr, dr, stack=stack,
+                                              pspec=(None, TP))
+    lam_shape = (dr,) if stack is None else (stack, dr)
+    params["lam"] = jnp.full(lam_shape, 0.65)  # a ~ 0.9^c after softplus
+    specs["lam"] = P(*((None,) * (len(lam_shape) - 1) + (TP,)))
+    params["out"], specs["out"] = linear_init(ks[5], dr, d, stack=stack,
+                                              pspec=(TP, FSDP))
+    return params, specs
+
+
+def _lru_scan_chunked(a: Array, bx: Array, h0: Array, chunk: int):
+    """h_t = a_t * h_{t-1} + bx_t; a, bx (B, S, dr)."""
+    B, S, dr = a.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    n_chunks = Sp // chunk
+    a_c = a.reshape(B, n_chunks, chunk, dr).transpose(1, 0, 2, 3)
+    bx_c = bx.reshape(B, n_chunks, chunk, dr).transpose(1, 0, 2, 3)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, ab):
+        a_j, bx_j = ab
+        aa, bb = jax.lax.associative_scan(combine, (a_j, bx_j), axis=1)
+        hs = aa * h[:, None] + bb
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(body, h0, (a_c, bx_c))
+    return hs.transpose(1, 0, 2, 3).reshape(B, Sp, dr)[:, :S], h_last
+
+
+def rglru_apply(
+    p: dict,
+    x: Array,
+    cfg,
+    *,
+    mode: str,
+    cache: RGLRUCache | None = None,
+    act_spec=P(),
+) -> tuple[Array, RGLRUCache | None]:
+    from .ssm import _causal_conv
+
+    B, S, d = x.shape
+    dr = cfg.d_rnn or d
+
+    gate = jax.nn.gelu(
+        maybe_shard(
+            jnp.einsum("bsd,df->bsf", x, p["in_gate"]), act_spec
+        )
+    )
+    xr = maybe_shard(
+        jnp.einsum("bsd,df->bsf", x, p["in_x"]), act_spec
+    )
+    history = cache.conv if mode == "decode" and cache is not None else None
+    xc = _causal_conv(xr, p["conv_w"], history)
+
+    r = jax.nn.sigmoid(jnp.einsum("bsf,fg->bsg", xc, p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsf,fg->bsg", xc, p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32))[None, None] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xc.astype(jnp.float32)
+    )
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        h = a[:, 0] * cache.h + gated[:, 0]
+        hs = h[:, None]
+        new_conv = jnp.concatenate([cache.conv, xr], axis=1)[:, 1:]
+        new_cache = RGLRUCache(new_conv, h, cache.length + 1)
+    else:
+        h0 = jnp.zeros((B, dr), jnp.float32)
+        hs, _ = _lru_scan_chunked(a, gated, h0, cfg.scan_chunk)
+        new_cache = None
+
+    y = hs.astype(x.dtype) * gate
+    out = maybe_shard(
+        jnp.einsum("bsf,fd->bsd", y, p["out"]), act_spec
+    )
+    return out, new_cache
+
+
+def init_rglru_cache(cfg, B: int, dtype):
+    dr = cfg.d_rnn or cfg.d_model
+    return RGLRUCache(
+        conv=jnp.zeros((B, cfg.ssm_conv - 1, dr), dtype),
+        h=jnp.zeros((B, dr), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )

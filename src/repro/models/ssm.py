@@ -1,0 +1,165 @@
+"""Mamba-1 selective SSM (falcon-mamba-7b), TPU-adapted.
+
+The CUDA selective-scan kernel does a fused sequential scan in SRAM. The TPU
+re-think (DESIGN.md §4): chunk the sequence into ``scan_chunk`` blocks, run an
+associative scan *within* each chunk (parallel, VMEM-sized (B, Lc, di, n)
+materialization), and carry the (B, di, n) state across chunks with lax.scan.
+This keeps memory O(Lc · di · n) instead of O(S · di · n) and exposes MXU
+parallelism inside chunks.
+
+Decode is O(1) in sequence length: the cache is (conv window, ssm state) —
+this is why falcon-mamba runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .modules import FSDP, TP, linear_init, maybe_shard
+
+Array = jax.Array
+
+
+class SSMCache(NamedTuple):
+    conv: Array   # (B, conv_k - 1, di) — last inputs for the causal conv
+    h: Array      # (B, di, n) — ssm state
+    length: Array
+
+
+def ssm_init(key, cfg, *, stack: int | None = None):
+    d, di, n, dtr, ck = (
+        cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    )
+    ks = jax.random.split(key, 7)
+    params, specs = {}, {}
+    params["in_proj"], specs["in_proj"] = linear_init(ks[0], d, 2 * di, stack=stack)
+    conv_shape = (ck, di) if stack is None else (stack, ck, di)
+    params["conv_w"] = 0.1 * jax.random.normal(ks[1], conv_shape, jnp.float32)
+    specs["conv_w"] = P(*((None,) * (len(conv_shape) - 1) + (TP,)))
+    params["x_proj"], specs["x_proj"] = linear_init(
+        ks[2], di, dtr + 2 * n, stack=stack, pspec=(TP, None)
+    )
+    params["dt_proj"], specs["dt_proj"] = linear_init(
+        ks[3], dtr, di, stack=stack, pspec=(None, TP)
+    )
+    alog_shape = (di, n) if stack is None else (stack, di, n)
+    params["A_log"] = jnp.log(
+        jnp.broadcast_to(1.0 + jnp.arange(n, dtype=jnp.float32), alog_shape)
+    )
+    specs["A_log"] = P(*((None,) * (len(alog_shape) - 2) + (TP, None)))
+    dshape = (di,) if stack is None else (stack, di)
+    params["D"] = jnp.ones(dshape, jnp.float32)
+    specs["D"] = P(*((None,) * (len(dshape) - 1) + (TP,)))
+    params["out_proj"], specs["out_proj"] = linear_init(
+        ks[5], di, d, stack=stack, pspec=(TP, FSDP)
+    )
+    return params, specs
+
+
+def _ssm_scan_chunked(a: Array, bx: Array, h0: Array, chunk: int):
+    """h_t = a_t * h_{t-1} + bx_t over axis 1. a, bx: (B, S, di, n)."""
+    B, S, di, n = a.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:  # tail padding: outputs beyond S are sliced away below
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    n_chunks = Sp // chunk
+    a_c = a.reshape(B, n_chunks, chunk, di, n).transpose(1, 0, 2, 3, 4)
+    bx_c = bx.reshape(B, n_chunks, chunk, di, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, ab):
+        a_j, bx_j = ab  # (B, Lc, di, n)
+        aa, bb = jax.lax.associative_scan(combine, (a_j, bx_j), axis=1)
+        # fold in the carried state: h_t = aa_t * h0 + bb_t
+        hs = aa * h[:, None] + bb
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(body, h0, (a_c, bx_c))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, di, n)[:, :S]
+    return hs, h_last
+
+
+def _causal_conv(x: Array, w: Array, history: Array | None = None):
+    """Depthwise causal conv along axis 1. x (B,S,di), w (ck,di)."""
+    ck = w.shape[0]
+    if history is None:
+        xp = jnp.pad(x, ((0, 0), (ck - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([history, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(ck)
+    )
+    return out.astype(x.dtype)
+
+
+def ssm_apply(
+    p: dict,
+    x: Array,           # (B, S, d)
+    cfg,
+    *,
+    mode: str,
+    cache: SSMCache | None = None,
+    act_spec=P(),
+) -> tuple[Array, SSMCache | None]:
+    B, S, d = x.shape
+    di, n, dtr, ck = cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+
+    xz = maybe_shard(
+        jnp.einsum("bsd,df->bsf", x, p["in_proj"]), act_spec
+    )
+    xin, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+
+    history = cache.conv if mode == "decode" and cache is not None else None
+    xc = _causal_conv(xin, p["conv_w"], history)
+    xc = jax.nn.silu(xc)
+
+    proj = jnp.einsum("bsf,fg->bsg", xc, p["x_proj"])  # (B,S,dtr+2n)
+    dt_r, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,rf->bsf", dt_r, p["dt_proj"]))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (di, n)
+
+    dtA = dt.astype(jnp.float32)[..., None] * A[None, None]      # (B,S,di,n)
+    a_bar = jnp.exp(dtA)
+    bx = (
+        dt.astype(jnp.float32)[..., None]
+        * b_ssm.astype(jnp.float32)[:, :, None, :]
+        * xc.astype(jnp.float32)[..., None]
+    )                                                            # (B,S,di,n)
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        h = a_bar[:, 0] * cache.h + bx[:, 0]                     # (B,di,n)
+        y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0].astype(jnp.float32))
+        y = y[:, None, :]
+        new_conv = jnp.concatenate([cache.conv, xin], axis=1)[:, 1:]
+        new_cache = SSMCache(new_conv, h, cache.length + 1)
+    else:
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+        hs, _ = _ssm_scan_chunked(a_bar, bx, h0, cfg.scan_chunk)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, c_ssm.astype(jnp.float32))
+        new_cache = None
+
+    y = y + xc.astype(jnp.float32) * p["D"][None, None].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = maybe_shard(
+        jnp.einsum("bsf,fd->bsd", y, p["out_proj"]), act_spec
+    )
+    return out, new_cache
+
+
+def init_ssm_cache(cfg, B: int, dtype):
+    return SSMCache(
+        conv=jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        h=jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )

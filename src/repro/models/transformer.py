@@ -1,0 +1,424 @@
+"""Model composition: blocks, scan-over-layers stacks, full-model init/apply.
+
+Families (configs/base.py):
+  dense / vlm  — decoder-only: x += attn(n(x)); x += mlp(n(x))
+  moe          — decoder-only with routed-expert FFN (+ shared experts)
+  ssm          — mamba blocks: x += ssm(n(x))
+  hybrid       — RecurrentGemma: temporal mixer per rglru_pattern + MLP
+  encdec       — whisper backbone: encoder (bidir) + decoder (causal + cross)
+
+Homogeneous stacks are scanned (stacked (L, ...) params) and rematerialized
+in training — both essential for compile time and memory at 512 devices.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import rglru as rglru_lib
+from . import ssm as ssm_lib
+from .modules import FSDP, TP, embed_init, layer_norm, linear_init, norm_init, rms_norm, maybe_shard
+
+Array = jax.Array
+
+
+class ActSpecs(NamedTuple):
+    """Activation sharding constraints (resolved mesh axes).
+
+    ``mesh``/``dp``/``tp`` are set when a concrete mesh is known; they enable
+    explicitly-scheduled collectives (the a2a MoE dispatch) inside pjit.
+    """
+
+    hid: Any = P()    # (B, S, d)   — d replicated
+    feat: Any = P()   # (B, S, f)   — f sharded over tp
+    exp: Any = P()    # (E, C, d)   — experts sharded over tp
+    logits: Any = P() # (B, S, V)   — vocab sharded over tp
+    mesh: Any = None  # jax Mesh (optional)
+    dp: Any = None    # data-parallel axis name(s), e.g. ('pod', 'data')
+    tp: Any = None    # tensor/expert-parallel axis name, e.g. 'model'
+    mlp_dp: bool = False  # ZeRO-3-style MLP: tokens stay (dp, sp)-sharded,
+                          # weights gathered — zero activation collectives.
+                          # Set when tokens/device >> d_ff (see §Perf iter 3)
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return -(-v // multiple) * multiple
+
+
+def _norm(x, scale, cfg, bias=None):
+    if cfg.norm == "ln":
+        return layer_norm(x, scale, bias)
+    return rms_norm(x, scale)
+
+
+# --------------------------------------------------------------------------
+# sub-layer init helpers
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg, *, stack=None):
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    params, specs = {}, {}
+    width = 2 * ff if cfg.gated_mlp else ff
+    params["wi"], specs["wi"] = linear_init(k1, d, width, stack=stack)
+    params["wo"], specs["wo"] = linear_init(k2, ff, d, stack=stack, pspec=(TP, FSDP))
+    return params, specs
+
+
+def mlp_apply(p, x, cfg, specs: ActSpecs):
+    # two sharding schedules (§Perf iter 3):
+    #   tp (Megatron): f shards over model — needs seq all-gather in +
+    #     partial-sum all-reduce out, ~2·T_full·d activation bytes/layer.
+    #   dp (ZeRO-3 compute): tokens stay (dp, sp)-sharded, weights gathered
+    #     (~3·d·ff bytes) — wins when tokens/device >> d_ff.
+    h_spec = specs.hid if specs.mlp_dp else specs.feat
+    h = maybe_shard(
+        jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype)), h_spec
+    )
+    if cfg.gated_mlp:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g) * u if cfg.act == "silu" else jax.nn.gelu(g) * u
+    else:
+        h = jax.nn.silu(h) if cfg.act == "silu" else jax.nn.gelu(h)
+    return maybe_shard(
+        jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype)), specs.hid
+    )
+
+
+def _block_init(key, cfg, *, stack, kind: str, cross: bool = False):
+    """kind: attn | mla | moe_ffn | ssm | rglru | mlp-only pieces assembled here."""
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    params["ln1"], specs["ln1"] = norm_init(cfg.d_model, stack=stack)
+    if kind in ("attn", "mla"):
+        init = attn_lib.mla_init if kind == "mla" else attn_lib.gqa_init
+        params["attn"], specs["attn"] = init(ks[0], cfg, stack=stack)
+    elif kind == "ssm":
+        params["ssm"], specs["ssm"] = ssm_lib.ssm_init(ks[0], cfg, stack=stack)
+        return params, specs  # mamba block has no separate FFN
+    elif kind == "rglru":
+        params["rec"], specs["rec"] = rglru_lib.rglru_init(ks[0], cfg, stack=stack)
+    if cross:
+        params["lnx"], specs["lnx"] = norm_init(cfg.d_model, stack=stack)
+        params["xattn"], specs["xattn"] = attn_lib.gqa_init(ks[2], cfg, stack=stack)
+    params["ln2"], specs["ln2"] = norm_init(cfg.d_model, stack=stack)
+    if cfg.n_experts:
+        params["moe"], specs["moe"] = moe_lib.moe_init(ks[1], cfg, stack=stack)
+    else:
+        params["mlp"], specs["mlp"] = mlp_init(ks[1], cfg, stack=stack)
+    return params, specs
+
+
+def _kv_expand_profitable(cfg, specs: ActSpecs) -> bool:
+    """Expand KV->H heads before flash attention iff that lets the head dim
+    shard over tp where the raw KV count could not (§Perf iter 4). Sharded
+    H/tp expanded heads cost LESS per-device memory than replicated KV."""
+    if specs.mesh is None or specs.tp is None or not cfg.n_kv_heads:
+        return False
+    tp_n = int(specs.mesh.shape[specs.tp])
+    return (tp_n > 1 and cfg.n_heads % tp_n == 0
+            and cfg.n_kv_heads % tp_n != 0
+            and cfg.n_heads > cfg.n_kv_heads)
+
+
+def _block_apply(
+    p, x, cfg, specs: ActSpecs, *, kind, mode, positions, cache, window=0,
+    enc_out=None,
+):
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(x, p["ln1"], cfg)
+    if kind in ("attn", "mla"):
+        fn = attn_lib.mla_apply if kind == "mla" else attn_lib.gqa_apply
+        kw = dict(mode=mode, positions=positions, cache=cache,
+                  act_spec=specs.feat, out_spec=specs.hid,
+                  full_specs=specs)
+        if kind == "attn":
+            kw["window"] = window
+            kw["kv_expand"] = _kv_expand_profitable(cfg, specs)
+        y, new_cache = fn(p["attn"], h, cfg, **kw)
+    elif kind == "ssm":
+        y, new_cache = ssm_lib.ssm_apply(
+            p["ssm"], h, cfg, mode=mode, cache=cache, act_spec=specs.feat
+        )
+        return x + y, new_cache, aux
+    elif kind == "rglru":
+        y, new_cache = rglru_lib.rglru_apply(
+            p["rec"], h, cfg, mode=mode, cache=cache, act_spec=specs.feat
+        )
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if enc_out is not None and "xattn" in p:
+        hx = _norm(x, p["lnx"], cfg)
+        y, _ = attn_lib.gqa_apply(
+            p["xattn"], hx, cfg, mode="encode", kv_src=enc_out,
+            act_spec=specs.feat, out_spec=specs.hid,
+        )
+        x = x + y
+    h2 = _norm(x, p["ln2"], cfg)
+    if "moe" in p:
+        y2, aux = moe_lib.moe_apply(p["moe"], h2, cfg, specs=specs)
+        y2 = maybe_shard(y2, specs.hid)
+    else:
+        y2 = mlp_apply(p["mlp"], h2, cfg, specs)
+    return x + y2, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# full models
+# --------------------------------------------------------------------------
+
+
+def layer_kind(cfg) -> str:
+    """Temporal-mixer kind; the FFN flavor (dense vs MoE) follows cfg.n_experts."""
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.attn == "mla":
+        return "mla"
+    return "attn"
+
+
+def init_model(key, cfg):
+    ks = jax.random.split(key, 8)
+    Vp = pad_vocab(cfg.vocab)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    params["embed"], specs["embed"] = embed_init(ks[0], Vp, cfg.d_model)
+    params["final_ln"], specs["final_ln"] = norm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"], specs["lm_head"] = linear_init(
+            ks[1], cfg.d_model, Vp, pspec=(FSDP, TP)
+        )
+
+    kind = layer_kind(cfg)
+    if cfg.family == "hybrid":
+        pat = cfg.rglru_pattern or ("rec", "rec", "attn")
+        period = len(pat)
+        n_super = cfg.n_layers // period
+        rest = cfg.n_layers % period
+        sub_p, sub_s = {}, {}
+        for i, knd in enumerate(pat):
+            kk = "rglru" if knd == "rec" else "attn"
+            sub_p[f"b{i}"], sub_s[f"b{i}"] = _block_init(
+                jax.random.fold_in(ks[2], i), cfg, stack=n_super, kind=kk
+            )
+        params["superblocks"], specs["superblocks"] = sub_p, sub_s
+        tail_p, tail_s = {}, {}
+        for i in range(rest):
+            kk = "rglru" if pat[i] == "rec" else "attn"
+            tail_p[f"t{i}"], tail_s[f"t{i}"] = _block_init(
+                jax.random.fold_in(ks[3], i), cfg, stack=None, kind=kk
+            )
+        params["tail"], specs["tail"] = tail_p, tail_s
+    elif cfg.family == "encdec":
+        params["enc_embed"] = 0.02 * jax.random.normal(
+            ks[4], (cfg.enc_seq, cfg.d_model), jnp.float32
+        )
+        specs["enc_embed"] = P(None, None)
+        params["enc_layers"], specs["enc_layers"] = _block_init(
+            ks[5], cfg, stack=cfg.n_enc_layers, kind="attn"
+        )
+        params["layers"], specs["layers"] = _block_init(
+            ks[6], cfg, stack=cfg.n_layers, kind="attn", cross=True
+        )
+        params["enc_final_ln"], specs["enc_final_ln"] = norm_init(cfg.d_model)
+    else:
+        params["layers"], specs["layers"] = _block_init(
+            ks[7], cfg, stack=cfg.n_layers, kind=kind
+        )
+    return params, specs
+
+
+def _scan_stack(layers_p, x, cfg, specs, *, kind, mode, positions, caches,
+                window_pattern=None, enc_out=None):
+    """Scan over stacked layer params; caches is a stacked pytree or None."""
+    use_remat = cfg.remat and mode == "train"
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, cache = xs
+
+        def f(x):
+            return _block_apply(
+                lp, x, cfg, specs, kind=kind, mode=mode, positions=positions,
+                cache=cache, enc_out=enc_out,
+            )
+
+        if use_remat:
+            f = jax.checkpoint(f)
+        x, new_cache, aux_l = f(x)
+        return (x, aux + aux_l), new_cache
+
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (layers_p, caches),
+        unroll=True if cfg.unroll_layers else 1,
+    )
+    return x, aux, new_caches
+
+
+def model_apply(params, batch, cfg, *, mode: str, specs: ActSpecs = ActSpecs(),
+                caches=None):
+    """Returns (logits, aux_loss, new_caches)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    Vp = pad_vocab(cfg.vocab)
+    x = params["embed"][tokens]
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    x = maybe_shard(x, specs.hid)
+
+    if cfg.family == "vlm" and "patches" in batch:
+        pe = batch["patches"].astype(x.dtype)  # (B, Pimg, d) vision stub
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1) \
+            if mode != "decode" else x
+
+    if mode == "decode":
+        positions = jnp.broadcast_to(
+            _cache_length(caches, cfg)[None, None], (B, 1)
+        ).astype(jnp.int32)
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    aux = jnp.zeros((), jnp.float32)
+    kind = layer_kind(cfg)
+
+    if cfg.family == "encdec":
+        enc_out = None
+        if "enc_out" in batch:  # serving: encoder ran once at prefill
+            enc_out = batch["enc_out"].astype(x.dtype)
+        elif "frames" in batch:
+            e = batch["frames"].astype(x.dtype) + params["enc_embed"][None].astype(
+                x.dtype
+            )
+            e = maybe_shard(e, specs.hid)
+            e, _, _ = _scan_stack(
+                params["enc_layers"], e, cfg, specs, kind="attn", mode="encode",
+                positions=jnp.arange(e.shape[1], dtype=jnp.int32)[None, :],
+                caches=None,
+            )
+            enc_out = _norm(e, params["enc_final_ln"], cfg)
+        x, aux, new_caches = _scan_stack(
+            params["layers"], x, cfg, specs, kind="attn", mode=mode,
+            positions=positions, caches=caches, enc_out=enc_out,
+        )
+    elif cfg.family == "hybrid":
+        x, aux, new_caches = _hybrid_apply(
+            params, x, cfg, specs, mode=mode, positions=positions, caches=caches
+        )
+    else:
+        x, aux, new_caches = _scan_stack(
+            params["layers"], x, cfg, specs, kind=kind, mode=mode,
+            positions=positions, caches=caches,
+        )
+
+    x = _norm(x, params["final_ln"], cfg)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = maybe_shard(logits, specs.logits)
+    return logits.astype(jnp.float32), aux, new_caches
+
+
+def _hybrid_apply(params, x, cfg, specs, *, mode, positions, caches):
+    pat = cfg.rglru_pattern or ("rec", "rec", "attn")
+    period = len(pat)
+    n_super = cfg.n_layers // period
+    rest = cfg.n_layers % period
+    aux = jnp.zeros((), jnp.float32)
+    use_remat = cfg.remat and mode == "train"
+
+    def body(carry, xs):
+        x, aux = carry
+        lps, lcaches = xs
+
+        def f(x):
+            new_caches = []
+            for i, kn in enumerate(pat):
+                kk = "rglru" if kn == "rec" else "attn"
+                c = lcaches[i] if lcaches is not None else None
+                x, nc, _ = _block_apply(
+                    lps[f"b{i}"], x, cfg, specs, kind=kk, mode=mode,
+                    positions=positions, cache=c,
+                    window=cfg.local_window if kk == "attn" else 0,
+                )
+                new_caches.append(nc)
+            return x, new_caches
+
+        if use_remat:
+            f = jax.checkpoint(f)
+        x, new_caches = f(x)
+        ncs = None if new_caches[0] is None else tuple(new_caches)
+        return (x, aux), ncs
+
+    sup_caches = caches[0] if caches is not None else None
+    (x, aux), new_sup = jax.lax.scan(
+        body, (x, aux), (params["superblocks"], sup_caches),
+        unroll=True if cfg.unroll_layers else 1,
+    )
+    new_tail = []
+    for i in range(rest):
+        kk = "rglru" if pat[i] == "rec" else "attn"
+        c = caches[1][i] if caches is not None else None
+        x, nc, _ = _block_apply(
+            params["tail"][f"t{i}"], x, cfg, specs, kind=kk, mode=mode,
+            positions=positions, cache=c,
+            window=cfg.local_window if kk == "attn" else 0,
+        )
+        new_tail.append(nc)
+    ncs = None if caches is None else (new_sup, tuple(new_tail))
+    return x, aux, ncs
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+
+def _stack_caches(make_one, L):
+    """Build stacked (L, ...) caches by vmapping the constructor."""
+    return jax.vmap(lambda _: make_one())(jnp.arange(L))
+
+
+def init_caches(cfg, B: int, S: int):
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    kind = layer_kind(cfg)
+    if cfg.family == "hybrid":
+        pat = cfg.rglru_pattern or ("rec", "rec", "attn")
+        period = len(pat)
+        n_super = cfg.n_layers // period
+        rest = cfg.n_layers % period
+
+        def make(kn):
+            if kn == "rec":
+                return lambda: rglru_lib.init_rglru_cache(cfg, B, dtype)
+            return lambda: attn_lib.init_gqa_cache(
+                cfg, B, S, dtype, window=cfg.local_window
+            )
+
+        sup = tuple(_stack_caches(make(kn), n_super) for kn in pat)
+        tail = tuple(make(pat[i])() for i in range(rest))
+        return (sup, tail)
+    if kind == "ssm":
+        return _stack_caches(lambda: ssm_lib.init_ssm_cache(cfg, B, dtype),
+                             cfg.n_layers)
+    if kind == "mla":
+        return _stack_caches(lambda: attn_lib.init_mla_cache(cfg, B, S, dtype),
+                             cfg.n_layers)
+    return _stack_caches(lambda: attn_lib.init_gqa_cache(cfg, B, S, dtype),
+                         cfg.n_layers)
+
+
+def _cache_length(caches, cfg):
+    leaf = jax.tree.leaves(caches)
+    # every cache carries a scalar length as its last leaf per layer; take any
+    for x in jax.tree.leaves(caches):
+        if x.dtype == jnp.int32:
+            return x.reshape(-1)[0]
+    return jnp.zeros((), jnp.int32)

@@ -1,0 +1,4 @@
+from .adamw import AdamW, sgd_momentum
+from .schedule import cosine_schedule, linear_warmup
+
+__all__ = ["AdamW", "sgd_momentum", "cosine_schedule", "linear_warmup"]

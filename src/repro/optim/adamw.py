@@ -1,0 +1,106 @@
+"""AdamW + global-norm clipping in pure JAX (optax is not available offline).
+
+Optimizer state mirrors the parameter pytree (same sharding — the launcher
+pjit's it with the param pspecs), plus a scalar step counter.
+
+``grad_compress`` hook: when set to "int8", gradients are stochastically
+quantized to int8 with per-leaf scales before the (data-parallel) all-reduce
+implied by pjit, and dequantized after — a distributed-optimization trick for
+bandwidth-bound meshes (EXPERIMENTS.md §Perf discusses when it pays off).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def global_norm(tree) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def quantize_int8(g: Array, key: Array) -> tuple[Array, Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-30
+    noise = jax.random.uniform(key, g.shape, jnp.float32) - 0.5
+    q = jnp.clip(jnp.round(g / scale + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[Array], Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_compress: str = "none"   # "none" | "int8"
+
+    def init(self, params):
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {
+            "m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, params, grads, state):
+        step = state["step"] + 1
+        if self.grad_compress == "int8":
+            key = jax.random.fold_in(jax.random.key(17), step)
+            leaves, treedef = jax.tree.flatten(grads)
+            qs = []
+            for i, g in enumerate(leaves):
+                q, s = quantize_int8(
+                    g.astype(jnp.float32), jax.random.fold_in(key, i)
+                )
+                qs.append(q.astype(jnp.float32) * s)
+            grads = jax.tree.unflatten(treedef, qs)
+
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"m": m, "v": v, "step": step}
+
+
+def sgd_momentum(lr: float = 0.1, momentum: float = 0.9):
+    @dataclasses.dataclass(frozen=True)
+    class _SGD:
+        def init(self, params):
+            return {
+                "mom": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32),
+            }
+
+        def update(self, params, grads, state):
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads,
+            )
+            params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                params, mom,
+            )
+            return params, {"mom": mom, "step": state["step"] + 1}
+
+    return _SGD()

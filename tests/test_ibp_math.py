@@ -1,0 +1,147 @@
+"""Unit tests for the IBP math layer against float64 numpy oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ibp import math as ibm
+
+jax.config.update("jax_enable_x64", False)
+
+
+def np_collapsed_loglik(X, Z, sx, sa):
+    """Direct float64 evaluation of G&G Eq. 26."""
+    N, D = X.shape
+    K = Z.shape[1]
+    W = Z.T @ Z + (sx / sa) ** 2 * np.eye(K)
+    M = np.linalg.inv(W)
+    s, logdet = np.linalg.slogdet(W)
+    assert s > 0
+    mid = np.eye(N) - Z @ M @ Z.T
+    tr = np.trace(X.T @ mid @ X)
+    return (
+        -0.5 * N * D * np.log(2 * np.pi)
+        - (N - K) * D * np.log(sx)
+        - K * D * np.log(sa)
+        - 0.5 * D * logdet
+        - tr / (2 * sx**2)
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("N,D,K,K_max", [(20, 8, 3, 6), (50, 16, 5, 12)])
+def test_collapsed_loglik_matches_numpy(seed, N, D, K, K_max):
+    rng = np.random.default_rng(seed)
+    Z = (rng.random((N, K)) < 0.4).astype(np.float64)
+    Z[:, 0] = 1  # ensure non-degenerate
+    A = rng.standard_normal((K, D))
+    X = Z @ A + 0.3 * rng.standard_normal((N, D))
+    sx, sa = 0.5, 1.2
+
+    want = np_collapsed_loglik(X, Z, sx, sa)
+
+    Zp = np.zeros((N, K_max), np.float32)
+    Zp[:, :K] = Z
+    active = np.zeros(K_max, np.float32)
+    active[:K] = 1
+    got = ibm.collapsed_loglik(
+        jnp.float32((X * X).sum()),
+        jnp.asarray(Zp.T @ X, jnp.float32),
+        jnp.asarray(Zp.T @ Zp, jnp.float32),
+        jnp.asarray(active),
+        jnp.float32(N),
+        D,
+        jnp.float32(sx),
+        jnp.float32(sa),
+    )
+    assert np.isclose(float(got), want, rtol=1e-4), (float(got), want)
+
+
+def test_sherman_morrison_updates():
+    rng = np.random.default_rng(0)
+    K = 8
+    W = np.eye(K) * 2.0
+    Z = (rng.random((30, K)) < 0.5).astype(np.float64)
+    W = Z.T @ Z + 0.7 * np.eye(K)
+    M = np.linalg.inv(W)
+    z = (rng.random(K) < 0.5).astype(np.float64)
+
+    M1, ld1 = ibm.sm_update(jnp.asarray(M, jnp.float32), jnp.asarray(z, jnp.float32))
+    want = np.linalg.inv(W + np.outer(z, z))
+    np.testing.assert_allclose(np.asarray(M1), want, rtol=1e-4, atol=1e-5)
+    s, want_ld = np.linalg.slogdet(W + np.outer(z, z))
+    _, base_ld = np.linalg.slogdet(W)
+    assert np.isclose(float(ld1), want_ld - base_ld, rtol=1e-4)
+
+    M2, ld2 = ibm.sm_downdate(jnp.asarray(want, jnp.float32), jnp.asarray(z, jnp.float32))
+    np.testing.assert_allclose(np.asarray(M2), M, rtol=1e-3, atol=1e-4)
+
+
+def test_a_posterior_matches_conjugate_formula():
+    rng = np.random.default_rng(1)
+    N, D, K, K_max = 40, 6, 3, 8
+    Z = (rng.random((N, K)) < 0.5).astype(np.float64)
+    A_true = rng.standard_normal((K, D))
+    X = Z @ A_true + 0.2 * rng.standard_normal((N, D))
+    sx, sa = 0.4, 1.0
+
+    W = Z.T @ Z + (sx / sa) ** 2 * np.eye(K)
+    want_mean = np.linalg.solve(W, Z.T @ X)
+
+    Zp = np.zeros((N, K_max), np.float32)
+    Zp[:, :K] = Z
+    act = np.zeros(K_max, np.float32)
+    act[:K] = 1
+    mean, M = ibm.a_posterior(
+        jnp.asarray(Zp.T @ Zp, jnp.float32),
+        jnp.asarray(Zp.T @ X, jnp.float32),
+        jnp.asarray(act),
+        jnp.float32(sx),
+        jnp.float32(sa),
+    )
+    np.testing.assert_allclose(np.asarray(mean)[:K], want_mean, rtol=1e-3,
+                               atol=1e-4)
+    # inactive rows must be exactly zero
+    assert np.all(np.asarray(mean)[K:] == 0)
+
+
+def test_a_posterior_draw_moments():
+    """Monte-Carlo check that draws have the right mean/marginal variance."""
+    rng = np.random.default_rng(2)
+    N, D, K, K_max = 60, 4, 2, 4
+    Z = (rng.random((N, K)) < 0.6).astype(np.float64)
+    X = Z @ rng.standard_normal((K, D)) + 0.3 * rng.standard_normal((N, D))
+    sx, sa = 0.5, 1.0
+    W = Z.T @ Z + (sx / sa) ** 2 * np.eye(K)
+    M = np.linalg.inv(W)
+    want_mean = M @ Z.T @ X
+
+    Zp = np.zeros((N, K_max), np.float32)
+    Zp[:, :K] = Z
+    act = np.zeros(K_max, np.float32)
+    act[:K] = 1
+    draws = []
+    for i in range(400):
+        d = ibm.a_posterior_draw(
+            jax.random.key(i),
+            jnp.asarray(Zp.T @ Zp, jnp.float32),
+            jnp.asarray(Zp.T @ X, jnp.float32),
+            jnp.asarray(act), jnp.float32(sx), jnp.float32(sa),
+        )
+        draws.append(np.asarray(d)[:K])
+    draws = np.stack(draws)
+    np.testing.assert_allclose(draws.mean(0), want_mean, atol=0.05)
+    want_var = sx**2 * np.diag(M)
+    np.testing.assert_allclose(
+        draws.var(0).mean(axis=1), want_var, rtol=0.35
+    )
+
+
+def test_inverse_gamma_draw_moments():
+    a, b = 5.0, 3.0
+    key = jax.random.key(0)
+    xs = jax.vmap(
+        lambda k: ibm.inverse_gamma_draw(k, jnp.float32(a), jnp.float32(b))
+    )(jax.random.split(key, 4000))
+    want_mean = b / (a - 1)
+    assert np.isclose(float(jnp.mean(xs)), want_mean, rtol=0.1)

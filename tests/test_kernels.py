@@ -1,0 +1,117 @@
+"""Per-kernel allclose vs pure-jnp oracle: shape & dtype sweeps + hypothesis
+property tests (interpret=True executes the Pallas body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.feature_stats import feature_stats, feature_stats_ref
+from repro.kernels.gaussian_sse import gaussian_sse, gaussian_sse_ref
+from repro.kernels.gibbs_flip import gibbs_flip_core, gibbs_flip_ref
+
+SHAPES = [(16, 8, 4), (100, 36, 16), (257, 64, 8), (64, 128, 32), (33, 20, 5)]
+
+
+def _inputs(N, D, K, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((N, D)), dtype)
+    Z = jnp.asarray((rng.random((N, K)) < 0.3), dtype)
+    A = jnp.asarray(rng.standard_normal((K, D)), dtype)
+    act = jnp.asarray((rng.random(K) < 0.8), dtype)
+    return X, Z, A, act, rng
+
+
+@pytest.mark.parametrize("N,D,K", SHAPES)
+@pytest.mark.parametrize("block_n", [32, 128])
+def test_gibbs_flip_matches_ref(N, D, K, block_n):
+    X, Z, A, act, rng = _inputs(N, D, K)
+    lpi = jnp.asarray(rng.standard_normal(K), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((N, K)) * 2, jnp.float32)
+    inv2s2 = jnp.float32(0.5)
+    got = gibbs_flip_core(X, Z, A, lpi, act, u, inv2s2, block_n=block_n)
+    want = gibbs_flip_ref(X, Z, A, lpi, act, u, inv2s2)
+    assert jnp.all(got == want), f"mismatch at {(N, D, K, block_n)}"
+
+
+@pytest.mark.parametrize("N,D,K", SHAPES)
+def test_feature_stats_matches_ref(N, D, K):
+    X, Z, _, _, _ = _inputs(N, D, K)
+    ztz, ztx, m = feature_stats(X, Z, block_n=64)
+    ztz_r, ztx_r, m_r = feature_stats_ref(X, Z)
+    np.testing.assert_allclose(ztz, ztz_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ztx, ztx_r, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(m, m_r)
+
+
+@pytest.mark.parametrize("N,D,K", SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_gaussian_sse_matches_ref(N, D, K, dtype):
+    X, Z, A, act, _ = _inputs(N, D, K, dtype=dtype)
+    got = gaussian_sse(X, Z, A, act, block_n=64)
+    want = gaussian_sse_ref(X, Z, A, act)
+    rtol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(float(got), float(want), rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# property-based: invariants of the Gibbs-flip kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(5, 70),
+    d=st.integers(2, 40),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 10_000),
+)
+def test_gibbs_flip_property_binary_and_active_respected(n, d, k, seed):
+    X, Z, A, act, rng = _inputs(n, d, k, seed=seed)
+    lpi = jnp.asarray(rng.standard_normal(k), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((n, k)) * 2, jnp.float32)
+    out = gibbs_flip_core(X, Z, A, lpi, act, u, jnp.float32(0.5), block_n=32)
+    out_np = np.asarray(out)
+    # output is binary
+    assert set(np.unique(out_np)).issubset({0.0, 1.0})
+    # inactive columns unchanged
+    inactive = np.asarray(act) < 0.5
+    np.testing.assert_array_equal(out_np[:, inactive], np.asarray(Z)[:, inactive])
+    # kernel == oracle everywhere (the strongest property)
+    want = np.asarray(gibbs_flip_ref(X, Z, A, lpi, act, u, jnp.float32(0.5)))
+    np.testing.assert_array_equal(out_np, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(5, 60),
+    d=st.integers(2, 30),
+    k=st.integers(1, 10),
+    seed=st.integers(0, 10_000),
+)
+def test_feature_stats_property_psd_and_counts(n, d, k, seed):
+    X, Z, _, _, _ = _inputs(n, d, k, seed=seed)
+    ztz, ztx, m = feature_stats(X, Z, block_n=32)
+    # ZtZ is PSD with diagonal = column counts = m
+    np.testing.assert_allclose(np.diag(np.asarray(ztz)), np.asarray(m))
+    evals = np.linalg.eigvalsh(np.asarray(ztz))
+    assert evals.min() > -1e-4
+    # m bounded by N
+    assert np.all(np.asarray(m) <= n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(5, 60),
+    d=st.integers(2, 30),
+    k=st.integers(1, 10),
+    seed=st.integers(0, 10_000),
+)
+def test_gaussian_sse_property_nonneg_and_zero_residual(n, d, k, seed):
+    X, Z, A, act, _ = _inputs(n, d, k, seed=seed)
+    s = gaussian_sse(X, Z, A, act, block_n=32)
+    assert float(s) >= 0
+    # exact-zero residual case
+    X2 = (Z * act[None, :]) @ A
+    s2 = gaussian_sse(X2, Z, A, act, block_n=32)
+    assert float(s2) < 1e-3 * max(1.0, float(jnp.sum(X2 * X2)))

@@ -1,0 +1,99 @@
+"""Property tests for the MoE dispatch machinery and the fused-sync SSE
+identity — the §Perf-critical code paths, checked at the math level
+(mesh-level equivalence is covered in test_distributed.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ibp import math as ibm
+from repro.models.moe import _dispatch_tables, _route
+
+
+def _routing(T, E, k, seed):
+    rng = np.random.default_rng(seed)
+    probs = rng.random((T, E)).astype(np.float32)
+    probs /= probs.sum(1, keepdims=True)
+    gv, ei = jax.lax.top_k(jnp.asarray(probs), k)
+    gv = gv / jnp.sum(gv, axis=-1, keepdims=True)
+    counts = jnp.zeros((E,), jnp.float32).at[ei.reshape(-1)].add(1.0)
+    return gv, ei, counts
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    T=st.integers(4, 64),
+    E=st.integers(2, 16),
+    k=st.integers(1, 3),
+    cf=st.floats(0.5, 4.0),
+    seed=st.integers(0, 99),
+)
+def test_dispatch_table_invariants(T, E, k, cf, seed):
+    k = min(k, E)
+    gv, ei, counts = _routing(T, E, k, seed)
+    C = max(1, int(T * k / E * cf))
+    table, gtable = _dispatch_tables(ei, gv, counts, E, C, T)
+    table = np.asarray(table)
+    gtable = np.asarray(gtable)
+    # every slot is either a valid token id or the zero-row sentinel T
+    assert table.min() >= 0 and table.max() <= T
+    # gates are zero exactly on sentinel slots
+    assert np.all((gtable == 0) | (table != T))
+    # no token appears more than once in the same expert's slots
+    for e in range(E):
+        toks = table[e][table[e] != T]
+        assert len(np.unique(toks)) == len(toks)
+    # each kept (token, expert) pair carries its routing gate
+    gv_np, ei_np = np.asarray(gv), np.asarray(ei)
+    for e in range(E):
+        for c in range(C):
+            t = table[e, c]
+            if t == T:
+                continue
+            j = list(ei_np[t]).index(e)
+            np.testing.assert_allclose(gtable[e, c], gv_np[t, j], rtol=1e-6)
+    # capacity respected per expert; nothing dropped when cf is generous
+    if C >= T * k:
+        kept = (table != T).sum()
+        assert kept == T * k
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    N=st.integers(4, 40),
+    D=st.integers(2, 12),
+    K=st.integers(1, 8),
+    seed=st.integers(0, 99),
+)
+def test_fused_sync_sse_identity(N, D, K, seed):
+    """||X - Z A||^2 == tr(XtX) - 2<A, ZtX> + <A, (ZtZ) A> with masks,
+    the identity that lets the fused sync drop the dedicated SSE reduce."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((N, D)).astype(np.float32)
+    Z = (rng.random((N, K)) < 0.4).astype(np.float32)
+    A = rng.standard_normal((K, D)).astype(np.float32)
+    active = (rng.random(K) < 0.7).astype(np.float32)
+    A = A * active[:, None]
+    direct = float(np.sum((X - (Z * active[None, :]) @ A) ** 2))
+    ZtX = (Z.T @ X) * active[:, None]
+    ZtZ = (Z.T @ Z) * np.asarray(ibm.mask_outer(jnp.asarray(active)))
+    ident = float(np.sum(X * X) - 2.0 * np.sum(A * ZtX)
+                  + np.sum(A * (ZtZ @ A)))
+    np.testing.assert_allclose(ident, direct, rtol=2e-4, atol=2e-3)
+
+
+def test_route_aux_ingredients_match_onehot():
+    """_route's counts / prob sums equal the dense one-hot computation."""
+    T, E, k = 32, 8, 2
+    rng = np.random.default_rng(0)
+    xt = jnp.asarray(rng.standard_normal((T, 16)), jnp.float32)
+    router = jnp.asarray(rng.standard_normal((16, E)), jnp.float32)
+    gv, ei, counts, psum = _route(xt, router, E, k)
+    probs = jax.nn.softmax((xt @ router).astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(ei, E).sum(1)  # (T, E)
+    np.testing.assert_allclose(np.asarray(counts),
+                               np.asarray(onehot.sum(0)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(psum),
+                               np.asarray(probs.sum(0)), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gv.sum(1)), 1.0, rtol=1e-5)
