@@ -1,0 +1,88 @@
+"""Multi-chain scaling: per-chain iteration cost vs chain count C.
+
+The multichain driver vmaps the FULL hybrid iteration over a chain axis,
+so C chains share one jitted step: the uncollapsed sweeps batch into
+larger matmuls and the (serial) collapsed tail scans run as one batched
+scan. On one device the per-chain cost should therefore fall well below
+Cx a single chain until the FLOP side saturates — that amortization
+curve is what this benchmark measures (artifacts/multichain_scaling.csv).
+
+  python benchmarks/multichain_scaling.py --N 240 --C 1 2 4 8
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ibp import (
+    IBPHypers,
+    hybrid_iteration_multichain,
+    init_multichain,
+)
+from repro.data import cambridge_data, shard_rows
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def time_multichain(N: int, P: int, C: int, iters: int, L: int,
+                    K_max: int) -> float:
+    X, _, _ = cambridge_data(N=N, seed=0)
+    Xs = jnp.asarray(shard_rows(X, P))
+    hyp = IBPHypers()
+    gs, ss = init_multichain(jax.random.key(0), Xs, C, K_max, K_tail=8,
+                             K_init=4)
+    gs, ss = hybrid_iteration_multichain(Xs, gs, ss, hyp, L=L, N_global=N)
+    jax.block_until_ready(ss.Z)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        gs, ss = hybrid_iteration_multichain(Xs, gs, ss, hyp, L=L,
+                                             N_global=N)
+    jax.block_until_ready(ss.Z)
+    return (time.time() - t0) / iters
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--N", type=int, default=240)
+    ap.add_argument("--P", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--L", type=int, default=5)
+    ap.add_argument("--K-max", type=int, default=24)
+    ap.add_argument("--C", type=int, nargs="+", default=[1, 2, 4, 8])
+    args = ap.parse_args(argv)
+
+    rows, lines = [], []
+    # amortization is defined vs a SINGLE chain — time C=1 for the
+    # baseline even when it is not in the requested sweep
+    base = time_multichain(args.N, args.P, 1, args.iters, args.L,
+                           args.K_max)
+    for C in args.C:
+        s = (base if C == 1 else
+             time_multichain(args.N, args.P, C, args.iters, args.L,
+                             args.K_max))
+        per_chain = s / C
+        eff = base / per_chain  # >1: amortization from chain batching
+        rows.append((C, s, per_chain, eff))
+        lines.append(
+            f"multichain__C{C},{s * 1e6:.0f},"
+            f"per_chain_us={per_chain * 1e6:.0f};eff={eff:.2f};"
+            f"N={args.N};P={args.P};L={args.L}"
+        )
+        print(lines[-1], flush=True)
+
+    os.makedirs(ART, exist_ok=True)
+    out = os.path.join(ART, "multichain_scaling.csv")
+    with open(out, "w") as fh:
+        fh.write("C,s_per_iter,s_per_chain_iter,amortization\n")
+        for C, s, pc, eff in rows:
+            fh.write(f"{C},{s:.4f},{pc:.4f},{eff:.2f}\n")
+    print(f"-> {out}")
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -57,11 +57,11 @@ def time_shardmap(N: int, P: int, iters: int, L: int, K_max: int) -> float:
         Xs = jnp.asarray(shard_rows(X, Pn))
         gs, ss = init_hybrid(jax.random.key(0), Xs, {K_max}, K_tail=8,
                              K_init=4)
-        mesh = jax.make_mesh((Pn,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh, set_mesh, AxisType
+        mesh = make_mesh((Pn,), ('data',), axis_types=(AxisType.Auto,))
         step = make_hybrid_iteration_shardmap(mesh, ('data',), IBPHypers(),
                                               L={L}, N_global={N})
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             sh = NamedSharding(mesh, P('data'))
             Xf = jax.device_put(Xs.reshape(-1, Xs.shape[-1]), sh)
             Zf = jax.device_put(ss.Z.reshape(-1, {K_max}), sh)

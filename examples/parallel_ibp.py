@@ -23,6 +23,7 @@ from repro.core.ibp import (IBPHypers, init_hybrid,
                             make_hybrid_iteration_shardmap)
 from repro.core.ibp.diagnostics import train_joint_loglik
 from repro.data import cambridge_data, shard_rows
+from repro import compat
 
 N, Pn, K_max, K_tail = 320, 8, 16, 6
 print(f"devices: {jax.device_count()} | observations: {N} over P={Pn} shards")
@@ -30,13 +31,12 @@ print(f"devices: {jax.device_count()} | observations: {N} over P={Pn} shards")
 X, _, _ = cambridge_data(N=N, sigma_n=0.5, seed=1)
 Xs = jnp.asarray(shard_rows(X, Pn))
 
-mesh = jax.make_mesh((Pn,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((Pn,), ("data",), axis_types=(compat.AxisType.Auto,))
 gs, ss = init_hybrid(jax.random.key(1), Xs, K_max, K_tail=K_tail, K_init=3)
 step = make_hybrid_iteration_shardmap(mesh, ("data",), IBPHypers(), L=5,
                                       N_global=N)
 
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     sh = NamedSharding(mesh, P("data"))
     # place each observation shard on its device
     Xf = jax.device_put(Xs.reshape(N, -1), sh)

@@ -72,9 +72,12 @@ def load_pytree(path: str, template: Any, step: int) -> Any:
         leaves = [data[f"leaf_{i:05d}"] for i in range(len(data.files))]
     _, treedef = jax.tree.flatten(template)
     t_leaves = jax.tree.leaves(template)
-    assert len(leaves) == len(t_leaves), (
-        f"checkpoint has {len(leaves)} leaves, template has {len(t_leaves)}"
-    )
+    if len(leaves) != len(t_leaves):
+        raise ValueError(
+            f"checkpoint {fname} has {len(leaves)} leaves but the template "
+            f"has {len(t_leaves)} — the checkpoint predates a state-layout "
+            f"change; clear or rename the checkpoint directory to start fresh"
+        )
     cast = []
     for l, t in zip(leaves, t_leaves):
         if _is_key(t):

@@ -1,0 +1,111 @@
+"""JAX-version compatibility shims (DESIGN.md §6).
+
+The production sharding path was written against the modern mesh API
+(``jax.sharding.AxisType``, ``jax.set_mesh``, ``jax.shard_map`` with
+``check_vma``). The installed floor is JAX 0.4.37, where none of those
+exist: meshes have no axis types, there is no global mesh setter, and
+shard_map lives in ``jax.experimental.shard_map`` with the older
+``check_rep`` knob. Every mesh-construction / mesh-context /
+shard_map call site in the repo goes through this module so one
+codebase runs on both — never import ``AxisType`` / ``set_mesh`` /
+``shard_map`` from ``jax`` directly.
+
+All shims are semantic no-ops on the old API:
+
+* ``AxisType.Auto`` is the default (and only) behavior of a 0.4.x mesh.
+* ``set_mesh`` only matters for the implicit-mesh jit path; our code
+  always passes explicit ``NamedSharding``s (which carry their mesh),
+  so a null context is correct.
+* ``check_vma=False`` maps to ``check_rep=False`` — same meaning
+  (skip the replication/varying-manual-axes check), renamed upstream.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Any, Sequence
+
+import jax
+
+try:  # jax >= 0.6: meshes carry explicit/auto/manual axis types
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPE = True
+except ImportError:
+    HAS_AXIS_TYPE = False
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` on 0.4.x (all-Auto)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: tuple | None = None,
+    devices: Sequence | None = None,
+):
+    """``jax.make_mesh`` that drops ``axis_types`` where unsupported."""
+    kw: dict[str, Any] = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None and HAS_AXIS_TYPE:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names, axis_types=axis_types, **kw
+            )
+        except TypeError:  # make_mesh exists but predates axis_types
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def set_mesh(mesh):
+    """Context manager equivalent of ``jax.set_mesh`` on any version.
+
+    On 0.4.x the legacy ``with mesh:`` context sets the ambient
+    (thread-resource) mesh, which is what bare-PartitionSpec
+    ``with_sharding_constraint`` calls resolve against — the same role
+    ``jax.set_mesh`` plays on the modern API.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)  # type: ignore[attr-defined]
+    return mesh  # jax.sharding.Mesh is itself a context manager
+
+
+def get_abstract_mesh():
+    """The ambient mesh set by ``set_mesh``, or None when unset/empty."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        mesh = jax.sharding.get_abstract_mesh()  # type: ignore[attr-defined]
+        return mesh if mesh is not None and mesh.axis_names else None
+    from jax.interpreters import pxla
+
+    mesh = pxla.thread_resources.env.physical_mesh
+    return mesh if mesh is not None and mesh.axis_names else None
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename folded in."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental import shard_map as _sm
+
+    return _sm.shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def axis_index(axis_names):
+    """``jax.lax.axis_index`` accepting a 1-tuple on versions that only
+    take a bare name."""
+    if not isinstance(axis_names, str) and len(axis_names) == 1:
+        return jax.lax.axis_index(axis_names[0])
+    return jax.lax.axis_index(axis_names)

@@ -5,10 +5,15 @@ from .uncollapsed import uncollapsed_step
 from .hybrid import (
     HybridGlobal,
     HybridShard,
+    hybrid_iteration_multichain,
     hybrid_iteration_vmap,
+    hybrid_stale_pass,
     init_hybrid,
+    init_multichain,
     make_hybrid_iteration_shardmap,
+    make_hybrid_stale_pass_shardmap,
 )
+from . import convergence
 
 __all__ = [
     "IBPHypers",
@@ -21,6 +26,11 @@ __all__ = [
     "HybridGlobal",
     "HybridShard",
     "init_hybrid",
+    "init_multichain",
     "hybrid_iteration_vmap",
+    "hybrid_iteration_multichain",
+    "hybrid_stale_pass",
     "make_hybrid_iteration_shardmap",
+    "make_hybrid_stale_pass_shardmap",
+    "convergence",
 ]

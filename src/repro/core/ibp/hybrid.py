@@ -26,11 +26,22 @@ Exactness note: on p', the instantiated-feature sweep conditions on A+ only
 (tail contribution not subtracted), exactly as written in the paper's
 pseudocode; the tail sampler sees R = X_p - Z A+ as its data.
 
-Two drivers over the same per-shard kernels:
+Three drivers over the same per-shard kernels:
   * ``hybrid_iteration_vmap`` — P shards simulated by vmap on one device
     (CPU benchmarks / tests; psum == sum over the shard axis).
+  * ``hybrid_iteration_multichain`` — a chain axis vmapped OVER the full
+    hybrid iteration: C independent chains (split PRNG keys, independent
+    states) advance in a single jitted step on one device or mesh. This
+    is the backbone of the convergence-diagnostics test suite
+    (``core/ibp/convergence.py``) and of R-hat/ESS reporting in
+    ``runtime/driver.py`` (DESIGN.md §11).
   * ``make_hybrid_iteration_shardmap`` — shard_map over a mesh data axis
-    (the production path; psum == jax.lax.psum).
+    (the production path; psum == jax.lax.psum). Mesh construction and
+    shard_map itself go through ``repro.compat`` so the same code runs
+    on JAX 0.4.x and on the modern AxisType/set_mesh API.
+
+``hybrid_stale_pass`` is the bounded-staleness knob (DESIGN.md §10):
+sub-iterations only, no master sync — explicitly non-exact.
 """
 from __future__ import annotations
 
@@ -41,6 +52,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
 
 from . import math as ibm
 from .collapsed import _row_step
@@ -89,6 +102,7 @@ def init_hybrid(
 ) -> tuple[HybridGlobal, HybridShard]:
     P_, N_p, D = X_shards.shape
     dtype = X_shards.dtype
+    K_init = min(K_init, K_max)
     k0, k1, k2 = jax.random.split(key, 3)
     Z = jnp.zeros((P_, N_p, K_max), dtype)
     if K_init > 0:
@@ -313,18 +327,22 @@ def master_step2(
 # --------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend"))
-def hybrid_iteration_vmap(
+def _hybrid_iteration_body(
     X_shards: Array,            # (P, N_p, D)
     gs: HybridGlobal,
     ss: HybridShard,
     hyp,
-    L: int = 5,
-    N_global: int = 0,
-    backend: str = "jnp",
+    L: int,
+    N_g: float,
+    backend: str,
 ) -> tuple[HybridGlobal, HybridShard]:
+    """One full hybrid iteration for ONE chain (vmap-simulated shards).
+
+    Kept free of jit/static plumbing so it can be vmapped over a chain
+    axis (``hybrid_iteration_multichain``) as well as jitted directly
+    (``hybrid_iteration_vmap``).
+    """
     P_, N_p, D = X_shards.shape
-    N_g = float(N_global if N_global else P_ * N_p)
 
     sub = partial(
         shard_sub_iterations, N_global=N_g, L=L, backend=backend
@@ -368,8 +386,141 @@ def hybrid_iteration_vmap(
     return gs_new, ss_new
 
 
+@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend"))
+def hybrid_iteration_vmap(
+    X_shards: Array,            # (P, N_p, D)
+    gs: HybridGlobal,
+    ss: HybridShard,
+    hyp,
+    L: int = 5,
+    N_global: int = 0,
+    backend: str = "jnp",
+) -> tuple[HybridGlobal, HybridShard]:
+    P_, N_p, D = X_shards.shape
+    N_g = float(N_global if N_global else P_ * N_p)
+    return _hybrid_iteration_body(X_shards, gs, ss, hyp, L, N_g, backend)
+
+
 # --------------------------------------------------------------------------
-# driver 2: shard_map over a mesh (the production path)
+# driver 2: chain axis vmapped over the full iteration (multi-chain)
+# --------------------------------------------------------------------------
+
+
+def init_multichain(
+    key: Array,
+    X_shards: Array,  # (P, N_p, D) — shared by every chain
+    C: int,
+    K_max: int,
+    **kw,
+) -> tuple[HybridGlobal, HybridShard]:
+    """C independent chains: every state leaf gains a leading chain axis.
+
+    Chains share the data but start from split PRNG keys, so their
+    initial Z draws, feature seeds, and whole trajectories are
+    independent — exactly what split-R-hat needs.
+    """
+    keys = jax.random.split(key, C)
+    return jax.vmap(lambda k: init_hybrid(k, X_shards, K_max, **kw))(keys)
+
+
+@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend"))
+def hybrid_iteration_multichain(
+    X_shards: Array,            # (P, N_p, D) — shared, NOT chain-batched
+    gs: HybridGlobal,           # leaves lead with chain axis C
+    ss: HybridShard,            # leaves lead with chain axis C
+    hyp,
+    L: int = 5,
+    N_global: int = 0,
+    backend: str = "jnp",
+) -> tuple[HybridGlobal, HybridShard]:
+    """Advance C independent chains one full hybrid iteration, one jit."""
+    P_, N_p, D = X_shards.shape
+    N_g = float(N_global if N_global else P_ * N_p)
+    return jax.vmap(
+        lambda g, s: _hybrid_iteration_body(X_shards, g, s, hyp, L, N_g,
+                                            backend)
+    )(gs, ss)
+
+
+@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend"))
+def hybrid_stale_pass(
+    X_shards: Array,
+    gs: HybridGlobal,
+    ss: HybridShard,
+    hyp,
+    L: int = 1,
+    N_global: int = 0,
+    backend: str = "jnp",
+) -> tuple[HybridGlobal, HybridShard]:
+    """Bounded-staleness pass: shard sub-iterations WITHOUT the master sync.
+
+    Shards keep Gibbs-sweeping Z (and p' keeps exploring its tail) against
+    stale global parameters; tails carry over into the next full
+    iteration's promotion. Non-exact by construction — opt-in via
+    ``DriverConfig.stale_sync`` (DESIGN.md §10).
+
+    The key consumed by the sweeps (fold 13) and the key handed to the
+    next pass (fold 14) MUST differ — returning the consumed key would
+    make the next iteration's sub-iterations replay the exact same
+    per-(shard, l) uniform stream.
+    """
+    P_, N_p, D = X_shards.shape
+    N_g = float(N_global if N_global else P_ * N_p)
+    gs_sweep = dataclasses.replace(gs, key=jax.random.fold_in(gs.key, 13))
+    sub = partial(shard_sub_iterations, N_global=N_g, L=L, backend=backend)
+    Z, Z_tail, tail_active = jax.vmap(
+        sub, in_axes=(0, 0, 0, 0, None, 0)
+    )(X_shards, ss.Z, ss.Z_tail, ss.tail_active, gs_sweep, jnp.arange(P_))
+    gs_out = dataclasses.replace(gs, key=jax.random.fold_in(gs.key, 14))
+    return gs_out, HybridShard(Z=Z, Z_tail=Z_tail, tail_active=tail_active)
+
+
+def make_hybrid_stale_pass_shardmap(
+    mesh,
+    data_axes: tuple[str, ...],
+    L: int = 1,
+    N_global: int = 0,
+    backend: str = "jnp",
+):
+    """shard_map counterpart of ``hybrid_stale_pass``: sub-iterations with
+    NO collectives at all — the whole point of bounded staleness on a real
+    mesh is skipping the sync, so the pass must not leave the mesh layout
+    or touch psum. Bitwise-equivalent to the vmap stale pass (same fold-13
+    sweep key, same fold-14 key advance)."""
+
+    def step(X, gs: HybridGlobal, Z, Z_tail, tail_active):
+        N, D = X.shape
+        N_g = float(N_global if N_global else N)
+
+        def shard_fn(X_p, gs, Z_p, Zt_p, ta_p):
+            ta = ta_p[0]
+            idx = compat.axis_index(data_axes)
+            gs_sweep = dataclasses.replace(
+                gs, key=jax.random.fold_in(gs.key, 13)
+            )
+            Z_p, Zt_p, ta = shard_sub_iterations(
+                X_p, Z_p, Zt_p, ta, gs_sweep, idx, N_g, L, backend
+            )
+            gs_out = dataclasses.replace(
+                gs, key=jax.random.fold_in(gs.key, 14)
+            )
+            return gs_out, Z_p, Zt_p, ta[None, :]
+
+        shard_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+        gspec = jax.tree.map(lambda _: P(), gs)
+        return compat.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(shard_spec, gspec, shard_spec, shard_spec, shard_spec),
+            out_specs=(gspec, shard_spec, shard_spec, shard_spec),
+            check_vma=False,
+        )(X, gs, Z, Z_tail, tail_active)
+
+    return jax.jit(step)
+
+
+# --------------------------------------------------------------------------
+# driver 3: shard_map over a mesh (the production path)
 # --------------------------------------------------------------------------
 
 
@@ -405,6 +556,8 @@ def make_hybrid_iteration_shardmap(
     """
     import numpy as np
 
+    if sync not in ("staged", "fused"):
+        raise ValueError(f"sync={sync!r} not in ('staged', 'fused')")
     axis_sizes = [mesh.shape[a] for a in data_axes]
     P_ = int(np.prod(axis_sizes))
 
@@ -427,7 +580,7 @@ def make_hybrid_iteration_shardmap(
 
         def shard_fn_staged(X_p, gs, Z_p, Zt_p, ta_p):
             ta = ta_p[0]  # (1, K_tail) local block -> (K_tail,)
-            idx = jax.lax.axis_index(data_axes)
+            idx = compat.axis_index(data_axes)
             Z_p, Zt_p2, ta = shard_sub_iterations(
                 X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, backend
             )
@@ -445,7 +598,7 @@ def make_hybrid_iteration_shardmap(
 
         def shard_fn_fused(X_p, gs, Z_p, Zt_p, ta_p):
             ta = ta_p[0]
-            idx = jax.lax.axis_index(data_axes)
+            idx = compat.axis_index(data_axes)
             Z_p, Zt_p2, ta = shard_sub_iterations(
                 X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, backend
             )
@@ -488,7 +641,7 @@ def make_hybrid_iteration_shardmap(
         shard_fn = shard_fn_fused if sync == "fused" else shard_fn_staged
         shard_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
         gspec = jax.tree.map(lambda _: P(), gs)
-        return jax.shard_map(
+        return compat.shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(shard_spec, gspec, shard_spec, shard_spec, shard_spec),

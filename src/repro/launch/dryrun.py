@@ -26,6 +26,8 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.configs import ALL_SHAPES, ARCH_IDS, get_config, shape_applicable
 from repro.launch.specs import (
     abstract_caches,
@@ -182,7 +184,7 @@ def run_cell(arch: str, shape, mesh_name: str, force: bool = False) -> dict:
     mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             fn, args = build_step(cfg, shape, mesh)
             lowered = fn.lower(*args)
             t_lower = time.time() - t0
@@ -254,7 +256,7 @@ def run_ibp_cell(mesh_name: str, *, N: int = 1 << 20, D: int = 36,
     }
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             step = make_hybrid_iteration_shardmap(
                 mesh, axes, IBPHypers(), L=L, N_global=N, sync=sync
             )
@@ -363,7 +365,7 @@ def run_probe(arch: str, shape, mesh_name: str, force: bool = False) -> dict:
             if cfg.family == "encdec":
                 sub["n_enc_layers"] = L
             cfg_l = dataclasses.replace(cfg, **sub)
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 fn, args = build_step(
                     cfg_l, shape, mesh, force_param_bytes=full_pbytes
                 )

@@ -2,6 +2,8 @@
 
 Usage:
   python -m repro.launch.mcmc --N 1000 --P 5 --iters 1000 --L 5
+  python -m repro.launch.mcmc --driver multichain --chains 4   # + R-hat/ESS
+  python -m repro.launch.mcmc --driver shardmap --sync fused   # mesh path
 """
 from __future__ import annotations
 
@@ -25,6 +27,15 @@ def main(argv=None):
     ap.add_argument("--sigma-n", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default="artifacts/ckpt/mcmc")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--driver", default="vmap",
+                    choices=["vmap", "multichain", "shardmap"])
+    ap.add_argument("--chains", type=int, default=None,
+                    help="chain count for --driver multichain (default 4); "
+                         "values > 1 require that driver")
+    ap.add_argument("--sync", default="staged", choices=["staged", "fused"],
+                    help="master-sync schedule for --driver shardmap")
+    ap.add_argument("--stale-sync", type=int, default=0,
+                    help="bounded-staleness passes per iteration (non-exact)")
     ap.add_argument("--out", default="artifacts/mcmc_history.json")
     args = ap.parse_args(argv)
 
@@ -35,17 +46,47 @@ def main(argv=None):
     cfg = DriverConfig(
         P=args.P, K_max=args.K_max, L=args.L, n_iters=args.iters,
         ckpt_dir=args.ckpt_dir, seed=args.seed, backend=args.backend,
+        driver=args.driver,
+        # explicit --chains passes through so the driver's validation can
+        # reject it loudly under the wrong driver; the default never does
+        n_chains=(args.chains if args.chains is not None
+                  else (4 if args.driver == "multichain" else 1)),
+        sync=args.sync, stale_sync=args.stale_sync,
     )
     drv = MCMCDriver(X_train, cfg, IBPHypers(), X_eval=X_eval)
-    gs, ss = drv.run(on_eval=lambda r: print(
-        f"it={r['it']:5d} t={r['t']:7.1f}s K+={r['K']:2d} "
-        f"alpha={r['alpha']:.2f} sx={r['sigma_x']:.3f} "
-        f"ll_eval={r.get('joint_ll_eval', float('nan')):.1f}", flush=True))
+
+    def show(r):
+        line = (
+            f"it={r['it']:5d} t={r['t']:7.1f}s K+={r['K']:4.1f} "
+            f"alpha={r['alpha']:.2f} sx={r['sigma_x']:.3f} "
+            f"ll_eval={r.get('joint_ll_eval', float('nan')):.1f}"
+        )
+        import math
+        if "sigma_x_rhat" in r and math.isfinite(r["sigma_x_rhat"]):
+            line += (f" rhat(sx)={r['sigma_x_rhat']:.3f}"
+                     f" ess(sx)={r['sigma_x_ess']:.0f}")
+        print(line, flush=True)
+
+    gs, ss = drv.run(on_eval=show)
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as fh:
-        json.dump(drv.history, fh, indent=1)
+        # early eval records carry NaN diagnostics (not enough draws);
+        # bare NaN is not valid JSON — emit null instead
+        json.dump(_json_safe(drv.history), fh, indent=1)
     print(f"history -> {args.out}")
+
+
+def _json_safe(obj):
+    import math
+
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_json_safe(v) for v in obj]
+    return obj
 
 
 if __name__ == "__main__":

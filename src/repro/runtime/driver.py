@@ -1,5 +1,5 @@
-"""Fault-tolerant MCMC driver: checkpoint/restart, elastic re-sharding,
-straggler policy.
+"""Fault-tolerant MCMC driver: backend selection, multi-chain inference,
+checkpoint/restart, elastic re-sharding, capacity growth, diagnostics.
 
 Large-scale runnability contract (DESIGN.md §10):
 
@@ -10,12 +10,26 @@ Large-scale runnability contract (DESIGN.md §10):
   DIFFERENT shard count P — elastic scaling across restarts. Re-sharding is
   a pure reshape of the observation axis.
 * capacity growth: if feature-slot overflow is detected (gs.overflow), the
-  driver checkpoints, doubles K_max, and restarts in-process — growth is a
+  driver checkpoints and raises; a restart with a larger ``K_max`` pads the
+  checkpointed feature axis with empty slots and resumes — growth is a
   restart event, never a silent truncation.
 * straggler policy on real meshes: synchronous collectives absorb jitter; a
   dead pod is a restart from the latest checkpoint (same path as above). The
   paper's L sub-iterations amortize sync cost; ``stale_sync`` (bounded
-  staleness) exists as an opt-in knob and is marked non-exact.
+  staleness: that many sync-free sub-iteration passes are interleaved
+  before each full iteration) exists as an opt-in knob and is non-exact.
+
+Backend selection (DESIGN.md §11): ``DriverConfig.driver`` picks how one
+iteration is computed — the statistical kernel is identical in all three:
+
+* ``"vmap"``       — P shards simulated by vmap on one device (default).
+* ``"multichain"`` — C independent chains (``n_chains``) advanced in one
+  jitted step via a chain axis vmapped over the full iteration; eval
+  records report split-R-hat / ESS / MCSE over the per-iteration trace.
+* ``"shardmap"``   — the production collective path over a ``(data,)``
+  mesh of P devices (``sync`` selects the staged/fused master schedule).
+  State crosses the driver boundary in the canonical (P, N_p, K) layout,
+  so checkpoints are interchangeable across all backends.
 """
 from __future__ import annotations
 
@@ -28,9 +42,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import restore, save_pytree
-from repro.core.ibp import IBPHypers, hybrid_iteration_vmap, init_hybrid
+from repro.core.ibp import (
+    IBPHypers,
+    hybrid_iteration_multichain,
+    hybrid_iteration_vmap,
+    hybrid_stale_pass,
+    init_hybrid,
+    init_multichain,
+    make_hybrid_iteration_shardmap,
+    make_hybrid_stale_pass_shardmap,
+)
+from repro.core.ibp import convergence
 from repro.core.ibp.hybrid import HybridGlobal, HybridShard
 from repro.core.ibp.diagnostics import heldout_joint_loglik, train_joint_loglik
+
+BACKENDS = ("vmap", "multichain", "shardmap")
 
 
 @dataclasses.dataclass
@@ -50,6 +76,16 @@ class DriverConfig:
     K_init: int = 4
     backend: str = "jnp"       # "jnp" | "pallas" for the uncollapsed sweep
     stale_sync: int = 0        # >0 = bounded staleness (non-exact, off by default)
+    driver: str = "vmap"       # "vmap" | "multichain" | "shardmap"
+    n_chains: int = 1          # chain count for driver="multichain"
+    sync: str = "staged"       # "staged" | "fused" master sync (shardmap only)
+    overflow_every: int = 8    # overflow-detection cadence (host sync each check)
+
+
+def _pad_trailing(x: jax.Array, axis: int, n: int) -> jax.Array:
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, n)
+    return jnp.pad(x, pads)
 
 
 class MCMCDriver:
@@ -57,6 +93,22 @@ class MCMCDriver:
 
     def __init__(self, X: np.ndarray, cfg: DriverConfig,
                  hyp: IBPHypers | None = None, X_eval: np.ndarray | None = None):
+        if cfg.driver not in BACKENDS:
+            raise ValueError(f"driver={cfg.driver!r} not in {BACKENDS}")
+        if cfg.driver == "multichain" and cfg.n_chains < 1:
+            raise ValueError("multichain driver needs n_chains >= 1")
+        if cfg.driver != "multichain" and cfg.n_chains > 1:
+            raise ValueError(
+                f"n_chains={cfg.n_chains} has no effect with "
+                f"driver={cfg.driver!r}; use driver='multichain'"
+            )
+        if cfg.sync not in ("staged", "fused"):
+            raise ValueError(f"sync={cfg.sync!r} not in ('staged', 'fused')")
+        if cfg.sync != "staged" and cfg.driver != "shardmap":
+            raise ValueError(
+                f"sync={cfg.sync!r} has no effect with "
+                f"driver={cfg.driver!r}; use driver='shardmap'"
+            )
         self.cfg = cfg
         self.hyp = hyp or IBPHypers()
         N = (X.shape[0] // cfg.P) * cfg.P
@@ -67,41 +119,182 @@ class MCMCDriver:
         )
         self.N = N
         self.history: list[dict[str, float]] = []
+        # per-iteration scalar traces, one column per chain — the raw
+        # material for split-R-hat / ESS in eval records
+        self.trace: dict[str, list[np.ndarray]] = {"sigma_x": [], "K": []}
+        self._chain_axis = cfg.driver == "multichain"
+        self._build_backend()
 
-    # ---- state <-> checkpoint layout (global Z for elastic resharding)
+    # ---- backend selection -------------------------------------------------
+    def _build_backend(self) -> None:
+        """Install the backend hooks:
+
+        * ``_step(gs, st)`` / ``_stale(gs, st)`` — advance backend-NATIVE
+          state ``st`` (HybridShard for vmap/multichain; mesh-layout
+          buffers for shardmap, which stay device-resident across the
+          whole hot loop — conversion happens only at eval/ckpt cadence,
+          never per iteration).
+        * ``_to_native(ss)`` / ``_to_shard(st)`` — convert between the
+          canonical checkpoint layout and native state.
+        """
+        cfg = self.cfg
+        if cfg.driver in ("vmap", "multichain"):
+            it_fn = (hybrid_iteration_multichain if self._chain_axis
+                     else hybrid_iteration_vmap)
+            one = lambda fn, g, s: fn(self.Xs, g, s, self.hyp, L=cfg.L,
+                                      N_global=self.N, backend=cfg.backend)
+            self._step = lambda gs, ss: one(it_fn, gs, ss)
+            if self._chain_axis:
+                # built ONCE as jit(vmap(...)) — a bare vmap-of-jit would
+                # re-trace the full iteration body on every stale pass
+                self._stale = jax.jit(jax.vmap(
+                    lambda g, s: one(hybrid_stale_pass, g, s)))
+            else:
+                self._stale = lambda gs, ss: one(hybrid_stale_pass, gs, ss)
+            self._to_native = lambda ss: ss
+            self._to_shard = lambda ss: ss
+            return
+
+        # shardmap: the production collective path, P devices on a data mesh
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as PS
+
+        from repro.compat import make_mesh
+
+        if cfg.P > jax.device_count():
+            raise ValueError(
+                f"driver='shardmap' needs P={cfg.P} devices, have "
+                f"{jax.device_count()} (use --xla_force_host_platform_"
+                f"device_count on CPU)"
+            )
+        mesh = make_mesh((cfg.P,), ("data",))
+        raw = make_hybrid_iteration_shardmap(
+            mesh, ("data",), self.hyp, L=cfg.L, N_global=self.N,
+            backend=cfg.backend, sync=cfg.sync,
+        )
+        raw_stale = (
+            make_hybrid_stale_pass_shardmap(
+                mesh, ("data",), L=cfg.L, N_global=self.N,
+                backend=cfg.backend,
+            ) if cfg.stale_sync > 0 else None
+        )
+        sh = NamedSharding(mesh, PS("data"))
+        Xf = jax.device_put(jnp.asarray(self.X_global), sh)
+
+        def to_native(ss: HybridShard):
+            P_, N_p, K = ss.Z.shape
+            Kt = ss.Z_tail.shape[-1]
+            return (
+                jax.device_put(ss.Z.reshape(self.N, K), sh),
+                jax.device_put(ss.Z_tail.reshape(self.N, Kt), sh),
+                jax.device_put(ss.tail_active, sh),
+            )
+
+        def to_shard(st) -> HybridShard:
+            Zf, Zt, ta = st
+            P_, N_p = cfg.P, self.N // cfg.P
+            return HybridShard(
+                Z=Zf.reshape(P_, N_p, Zf.shape[-1]),
+                Z_tail=Zt.reshape(P_, N_p, Zt.shape[-1]),
+                tail_active=ta,
+            )
+
+        def step_with(fn, gs, st):
+            gs2, Zf, Zt, ta = fn(Xf, gs, *st)
+            return gs2, (Zf, Zt, ta)
+
+        self._step = lambda gs, st: step_with(raw, gs, st)
+        self._stale = lambda gs, st: step_with(raw_stale, gs, st)
+        self._to_native = to_native
+        self._to_shard = to_shard
+
+    # ---- state <-> checkpoint layout (global Z for elastic resharding) ----
+    def _init_state(self) -> tuple[HybridGlobal, HybridShard]:
+        cfg = self.cfg
+        kw = dict(
+            K_tail=cfg.K_tail, alpha=cfg.alpha, sigma_x=cfg.sigma_x,
+            sigma_a=cfg.sigma_a, K_init=cfg.K_init,
+        )
+        if self._chain_axis:
+            return init_multichain(
+                jax.random.key(cfg.seed), self.Xs, cfg.n_chains, cfg.K_max,
+                **kw,
+            )
+        return init_hybrid(jax.random.key(cfg.seed), self.Xs, cfg.K_max, **kw)
+
     def _to_ckpt(self, gs: HybridGlobal, ss: HybridShard) -> dict:
-        P, N_p, K = ss.Z.shape
+        # tail buffers are NOT serialized: checkpoints are written post-sync,
+        # where tails are always cleared — _from_ckpt rebuilds them empty at
+        # the configured K_tail (which a restart may therefore resize)
+        *lead, P, N_p, K = ss.Z.shape
         return {
             "gs": gs,
-            "Z_global": ss.Z.reshape(P * N_p, K),
-            "Z_tail_global": ss.Z_tail.reshape(P * N_p, ss.Z_tail.shape[2]),
-            "tail_active": jnp.max(ss.tail_active, axis=0),
+            "Z_global": ss.Z.reshape(*lead, P * N_p, K),
             "meta": {"it": gs.it},
         }
 
     def _from_ckpt(self, blob: dict) -> tuple[HybridGlobal, HybridShard]:
-        P = self.cfg.P
-        gs = blob["gs"]
+        cfg = self.cfg
+        gs: HybridGlobal = blob["gs"]
         Zg = blob["Z_global"]
-        Ztg = blob["Z_tail_global"]
-        N, K = Zg.shape
+        K_ck = Zg.shape[-1]
+        if K_ck > cfg.K_max:
+            raise ValueError(
+                f"checkpoint K_max={K_ck} exceeds configured {cfg.K_max}"
+            )
+        if K_ck < cfg.K_max:
+            # capacity-growth restart: pad the feature axis with empty slots
+            grow = cfg.K_max - K_ck
+            Zg = _pad_trailing(Zg, -1, grow)
+            gs = dataclasses.replace(
+                gs,
+                A=_pad_trailing(gs.A, -2, grow),
+                pi=_pad_trailing(gs.pi, -1, grow),
+                active=_pad_trailing(gs.active, -1, grow),
+                overflow=jnp.zeros_like(gs.overflow),
+            )
+        *lead, N, K = Zg.shape
+        # elastic P is a reshape of the observation axis — the checkpoint's
+        # N must survive the new config's truncation and divide by P, else
+        # fail with a message instead of a deep reshape/broadcast error
+        if N != self.N:
+            raise ValueError(
+                f"checkpoint has N={N} observations but this driver "
+                f"truncated the data to N={self.N} (P={cfg.P}); pick a P "
+                f"that keeps N={N}"
+            )
+        # chain-axis compatibility is checked loudly: a single-chain
+        # checkpoint must not silently restore under a chain-batched
+        # template (or vice versa), and the chain count is part of the
+        # state — n_chains cannot change across a restart
+        if self._chain_axis:
+            if not lead or lead[0] != cfg.n_chains:
+                raise ValueError(
+                    f"checkpoint chain axis {lead or 'absent'} does not "
+                    f"match configured n_chains={cfg.n_chains}"
+                )
+        elif lead:
+            raise ValueError(
+                f"checkpoint carries a chain axis {lead}; restore it with "
+                f"driver='multichain' and n_chains={lead[0]}"
+            )
+        P = cfg.P
+        # tails are cleared at every master sync, and checkpoints are only
+        # written post-sync — so tail buffers are rebuilt EMPTY at the
+        # CONFIGURED K_tail (a restart may widen/narrow tail exploration;
+        # the checkpoint's tail width does not pin it)
         ss = HybridShard(
-            Z=Zg.reshape(P, N // P, K),
-            Z_tail=Ztg.reshape(P, N // P, Ztg.shape[1]),
-            tail_active=jnp.tile(blob["tail_active"][None], (P, 1))
-            * 0.0,  # tails are cleared at sync; safe to drop on reshard
+            Z=Zg.reshape(*lead, P, N // P, K),
+            Z_tail=jnp.zeros((*lead, P, N // P, cfg.K_tail), Zg.dtype),
+            tail_active=jnp.zeros((*lead, P, cfg.K_tail), Zg.dtype),
         )
         return gs, ss
 
     def _template(self):
-        gs, ss = init_hybrid(
-            jax.random.key(self.cfg.seed), self.Xs, self.cfg.K_max,
-            K_tail=self.cfg.K_tail, alpha=self.cfg.alpha,
-            sigma_x=self.cfg.sigma_x, sigma_a=self.cfg.sigma_a,
-            K_init=self.cfg.K_init,
-        )
+        gs, ss = self._init_state()
         return self._to_ckpt(gs, ss)
 
+    # ---- main loop --------------------------------------------------------
     def run(self, n_iters: int | None = None,
             on_eval: Callable[[dict], None] | None = None,
             crash_at: int | None = None):
@@ -114,52 +307,120 @@ class MCMCDriver:
             gs, ss = self._from_ckpt(blob)
         else:
             start = 0
-            gs, ss = init_hybrid(
-                jax.random.key(cfg.seed), self.Xs, cfg.K_max,
-                K_tail=cfg.K_tail, alpha=cfg.alpha, sigma_x=cfg.sigma_x,
-                sigma_a=cfg.sigma_a, K_init=cfg.K_init,
-            )
+            gs, ss = self._init_state()
 
         t0 = time.time()
+        st = self._to_native(ss)  # backend-native state, device-resident
         for it in range(start, n_iters):
             if crash_at is not None and it == crash_at:
                 raise RuntimeError(f"injected crash at iteration {it}")
-            gs, ss = hybrid_iteration_vmap(
-                self.Xs, gs, ss, self.hyp, L=cfg.L, N_global=self.N,
-                backend=cfg.backend,
-            )
-            if (it + 1) % cfg.eval_every == 0 or it == n_iters - 1:
+            for _ in range(cfg.stale_sync):
+                gs, st = self._stale(gs, st)
+            gs, st = self._step(gs, st)
+            self._record_trace(gs)
+            last = it == n_iters - 1
+            need_eval = (it + 1) % cfg.eval_every == 0 or last
+            need_ckpt = (it + 1) % cfg.ckpt_every == 0 or last
+            # pulling gs.overflow blocks the host on the iteration's whole
+            # computation, so check at a bounded cadence, not every step —
+            # detection delay is <= overflow_every iterations (DESIGN.md §10)
+            overflowed = (
+                need_eval or need_ckpt
+                or (it + 1) % cfg.overflow_every == 0
+            ) and int(jnp.max(gs.overflow)) > 0
+            if need_eval or need_ckpt or overflowed:
+                # canonical layout is materialized at cadence only — the
+                # hot loop never leaves the backend's native layout
+                ss = self._to_shard(st)
+            if need_eval:
                 rec = self.evaluate(gs, ss, it + 1, time.time() - t0)
                 self.history.append(rec)
                 if on_eval:
                     on_eval(rec)
-            if (it + 1) % cfg.ckpt_every == 0 or it == n_iters - 1:
+            if need_ckpt:
                 save_pytree(cfg.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
-            if int(gs.overflow) > 0:
+            if overflowed:
                 # capacity growth: checkpoint + restart with larger K_max
-                save_pytree(cfg.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
+                if not need_ckpt:
+                    save_pytree(cfg.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
                 raise RuntimeError(
                     f"K_max={cfg.K_max} overflow at it={it}; restart with 2x K_max"
                 )
-        return gs, ss
+        return gs, self._to_shard(st)
+
+    # ---- diagnostics ------------------------------------------------------
+    def _record_trace(self, gs: HybridGlobal) -> None:
+        # keep DEVICE arrays: np.asarray here would block on every
+        # iteration's whole computation and kill async dispatch — the
+        # host sync is deferred to diagnostics() (eval cadence)
+        self.trace["sigma_x"].append(jnp.atleast_1d(gs.sigma_x))
+        self.trace["K"].append(jnp.atleast_1d(jnp.sum(gs.active, axis=-1)))
+
+    def diagnostics(self, burn_frac: float = 0.5) -> dict[str, float]:
+        """split-R-hat / ESS / MCSE of the monitored scalars over the
+        post-burn tail of the per-iteration trace (DESIGN.md §11).
+        R-hat is NaN until the trace has enough post-burn draws."""
+        out: dict[str, float] = {}
+        for name, rows in self.trace.items():
+            # convert each device row to host numpy ONCE, in place —
+            # releases the device buffer and keeps repeat evals linear
+            for i, r in enumerate(rows):
+                if not isinstance(r, np.ndarray):
+                    rows[i] = np.asarray(r, np.float64)
+            if len(rows) < 8:
+                continue
+            arr = np.stack(rows, axis=1)               # (C, T)
+            tail = arr[:, int(burn_frac * arr.shape[1]):]
+            s = convergence.summarize(tail, name)
+            for k in ("rhat", "ess", "mcse"):
+                out[f"{name}_{k}"] = s[f"{name}_{k}"]
+        return out
 
     def evaluate(self, gs: HybridGlobal, ss: HybridShard, it: int,
-                 elapsed: float) -> dict[str, float]:
-        Z = ss.Z.reshape(self.N, -1)
-        ll_train = float(train_joint_loglik(
-            jnp.asarray(self.X_global), Z, gs.A, gs.pi, gs.active, gs.sigma_x
-        ))
-        rec = {
-            "it": it,
-            "t": elapsed,
-            "K": int(jnp.sum(gs.active)),
-            "alpha": float(gs.alpha),
-            "sigma_x": float(gs.sigma_x),
-            "joint_ll_train": ll_train,
-        }
-        if self.X_eval is not None:
-            rec["joint_ll_eval"] = float(heldout_joint_loglik(
-                self.X_eval, gs.A, gs.pi, gs.active, gs.sigma_x,
-                jax.random.fold_in(gs.key, 999),
-            ))
+                 elapsed: float) -> dict[str, Any]:
+        X = jnp.asarray(self.X_global)
+        if self._chain_axis:
+            C = ss.Z.shape[0]
+            Z = ss.Z.reshape(C, self.N, -1)
+            lls = jax.vmap(
+                train_joint_loglik, in_axes=(None, 0, 0, 0, 0, 0)
+            )(X, Z, gs.A, gs.pi, gs.active, gs.sigma_x)
+            Ks = np.asarray(jnp.sum(gs.active, axis=-1))
+            rec: dict[str, Any] = {
+                "it": it,
+                "t": elapsed,
+                "K": float(Ks.mean()),
+                "K_chains": [int(k) for k in Ks],
+                "alpha": float(jnp.mean(gs.alpha)),
+                "sigma_x": float(jnp.mean(gs.sigma_x)),
+                "sigma_x_chains": [float(s) for s in np.asarray(gs.sigma_x)],
+                "joint_ll_train": float(jnp.mean(lls)),
+                "joint_ll_train_chains": [float(l) for l in np.asarray(lls)],
+            }
+            if self.X_eval is not None:
+                ev = jax.vmap(
+                    lambda A, pi, act, sx, k: heldout_joint_loglik(
+                        self.X_eval, A, pi, act, sx,
+                        jax.random.fold_in(k, 999),
+                    )
+                )(gs.A, gs.pi, gs.active, gs.sigma_x, gs.key)
+                rec["joint_ll_eval"] = float(jnp.mean(ev))
+        else:
+            Z = ss.Z.reshape(self.N, -1)
+            rec = {
+                "it": it,
+                "t": elapsed,
+                "K": int(jnp.sum(gs.active)),
+                "alpha": float(gs.alpha),
+                "sigma_x": float(gs.sigma_x),
+                "joint_ll_train": float(train_joint_loglik(
+                    X, Z, gs.A, gs.pi, gs.active, gs.sigma_x
+                )),
+            }
+            if self.X_eval is not None:
+                rec["joint_ll_eval"] = float(heldout_joint_loglik(
+                    self.X_eval, gs.A, gs.pi, gs.active, gs.sigma_x,
+                    jax.random.fold_in(gs.key, 999),
+                ))
+        rec.update(self.diagnostics())
         return rec

@@ -1,0 +1,63 @@
+"""Optional-``hypothesis`` shim for property tests.
+
+When hypothesis is installed (CI, via requirements-dev.txt) the property
+tests run under real ``@given`` search. When it is not, the same test
+functions run under ``pytest.mark.parametrize`` over a fixed-seed sample
+of the declared ranges — deterministic, collection never fails.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+def given_or_params(max_examples: int = 20, **ranges):
+    """Decorator: hypothesis ``@given`` over the ranges, or a fixed-seed
+    parametrized fallback.
+
+    Each range is an inclusive ``(lo, hi)`` pair; int pairs become
+    integer draws, float pairs become uniform draws.
+    """
+    names = list(ranges)
+
+    if HAVE_HYPOTHESIS:
+        strats = {}
+        for k, (lo, hi) in ranges.items():
+            if isinstance(lo, int) and isinstance(hi, int):
+                strats[k] = st.integers(lo, hi)
+            else:
+                strats[k] = st.floats(
+                    lo, hi, allow_nan=False, allow_infinity=False
+                )
+
+        def deco(f):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(**strats)(f)
+            )
+
+        return deco
+
+    rng = np.random.default_rng(0)
+    cases = []
+    for _ in range(max_examples):
+        vals = []
+        for k in names:
+            lo, hi = ranges[k]
+            if isinstance(lo, int) and isinstance(hi, int):
+                vals.append(int(rng.integers(lo, hi + 1)))
+            else:
+                vals.append(float(rng.uniform(lo, hi)))
+        cases.append(tuple(vals))
+
+    def deco(f):
+        return pytest.mark.parametrize(",".join(names), cases)(f)
+
+    return deco

@@ -1,0 +1,89 @@
+"""Unit tests for the convergence-diagnostics module (core/ibp/convergence):
+calibration on analytically understood chains — iid, shifted, AR(1)."""
+import numpy as np
+import pytest
+
+from repro.core.ibp import convergence as cv
+
+
+@pytest.fixture(scope="module")
+def iid():
+    return np.random.default_rng(0).standard_normal((4, 500))
+
+
+def _ar1(rho, C=4, T=1000, seed=1):
+    rng = np.random.default_rng(seed)
+    x = np.zeros((C, T))
+    for t in range(1, T):
+        x[:, t] = rho * x[:, t - 1] + rng.standard_normal(C)
+    return x
+
+
+def test_split_rhat_iid_near_one(iid):
+    assert abs(cv.split_rhat(iid) - 1.0) < 0.02
+
+
+def test_split_rhat_flags_disjoint_chains(iid):
+    shifted = iid + 5.0 * np.arange(4)[:, None]
+    assert cv.split_rhat(shifted) > 1.5
+
+
+def test_split_rhat_flags_within_chain_drift():
+    # a single chain that jumps halfway: caught by the half-split
+    x = np.concatenate([np.zeros(250), np.ones(250)])[None, :]
+    x = x + 0.01 * np.random.default_rng(2).standard_normal((1, 500))
+    assert cv.split_rhat(x) > 1.5
+
+
+def test_ess_iid_near_n(iid):
+    n = iid.size
+    assert 0.7 * n <= cv.ess(iid) <= n
+
+
+def test_ess_ar1_matches_theory():
+    # AR(1) with coefficient rho has tau = (1+rho)/(1-rho)
+    rho = 0.9
+    x = _ar1(rho, C=4, T=4000)
+    n = x.size
+    expect = n * (1 - rho) / (1 + rho)
+    got = cv.ess(x)
+    assert 0.5 * expect <= got <= 2.0 * expect, (got, expect)
+
+
+def test_mcse_iid_calibrated(iid):
+    # sd/sqrt(n) for iid standard normal
+    assert cv.mcse(iid) == pytest.approx(1.0 / np.sqrt(iid.size), rel=0.2)
+
+
+def test_geweke_z_stationary_vs_drift(iid):
+    assert abs(cv.geweke_z(iid)) < 3.5
+    drift = iid + np.linspace(0, 3, iid.shape[1])[None, :]
+    assert abs(cv.geweke_z(drift)) > 4.0
+
+
+def test_mean_diff_z_calibrated(iid):
+    rng = np.random.default_rng(3)
+    other = rng.standard_normal((4, 500))
+    assert abs(cv.mean_diff_z(iid, other)) < 4.0       # same mean
+    assert abs(cv.mean_diff_z(iid, other + 1.0)) > 10  # separated means
+
+
+def test_constant_traces_are_defined():
+    const = np.ones((2, 100))
+    assert np.isnan(cv.split_rhat(const))   # no variance: undefined, not crash
+    assert cv.mcse(const) == 0.0
+    assert cv.geweke_z(const) == 0.0
+    assert cv.mean_diff_z(const, const) == 0.0
+    assert np.isinf(cv.mean_diff_z(const, const + 1.0))
+
+
+def test_one_dim_trace_accepted(iid):
+    flat = iid[0]
+    assert cv.ess(flat) > 100
+    s = cv.summarize(flat, "x")
+    assert set(s) == {"x_mean", "x_sd", "x_rhat", "x_ess", "x_mcse"}
+
+
+def test_bad_shape_rejected():
+    with pytest.raises(ValueError):
+        cv.split_rhat(np.zeros((2, 3, 4)))

@@ -26,17 +26,17 @@ def test_shardmap_hybrid_runs_and_converges():
     out = run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.data import cambridge_data, shard_rows
         from repro.core.ibp import IBPHypers, init_hybrid, make_hybrid_iteration_shardmap
         X, _, _ = cambridge_data(N=96, seed=1)
         Pn = 8
-        mesh = jax.make_mesh((Pn,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((Pn,), ('data',), axis_types=(AxisType.Auto,))
         Xs = jnp.asarray(shard_rows(X, Pn))
         gs, ss = init_hybrid(jax.random.key(1), Xs, K_max=16, K_tail=6, K_init=4)
         step = make_hybrid_iteration_shardmap(mesh, ('data',), IBPHypers(),
                                               L=5, N_global=96)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             sh = NamedSharding(mesh, P('data'))
             Xf = jax.device_put(Xs.reshape(-1, 36), sh)
             Zf = jax.device_put(ss.Z.reshape(-1, 16), sh)
@@ -58,6 +58,7 @@ def test_shardmap_matches_vmap_semantics():
     out = run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.data import cambridge_data, shard_rows
         from repro.core.ibp import (IBPHypers, init_hybrid,
                                     hybrid_iteration_vmap,
@@ -74,11 +75,10 @@ def test_shardmap_matches_vmap_semantics():
             gs_v, ss_v = hybrid_iteration_vmap(Xs, gs_v, ss_v, hyp, L=2,
                                                N_global=32)
         # shard_map path
-        mesh = jax.make_mesh((Pn,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((Pn,), ('data',), axis_types=(AxisType.Auto,))
         step = make_hybrid_iteration_shardmap(mesh, ('data',), hyp, L=2,
                                               N_global=32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             sh = NamedSharding(mesh, P('data'))
             Xf = jax.device_put(Xs.reshape(-1, 36), sh)
             Zf = jax.device_put(ss_s.Z.reshape(-1, 12), sh)
@@ -108,6 +108,7 @@ def test_fused_sync_matches_staged():
     out = run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.data import cambridge_data, shard_rows
         from repro.core.ibp import (IBPHypers, init_hybrid,
                                     make_hybrid_iteration_shardmap)
@@ -115,15 +116,14 @@ def test_fused_sync_matches_staged():
         Pn, Km, Kt = 4, 12, 4
         hyp = IBPHypers()
         Xs = jnp.asarray(shard_rows(X, Pn))
-        mesh = jax.make_mesh((Pn,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((Pn,), ('data',), axis_types=(AxisType.Auto,))
         outs = {}
         for sync in ('staged', 'fused'):
             gs, ss = init_hybrid(jax.random.key(3), Xs, Km, K_tail=Kt,
                                  K_init=3)
             step = make_hybrid_iteration_shardmap(mesh, ('data',), hyp, L=2,
                                                   N_global=64, sync=sync)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 sh = NamedSharding(mesh, P('data'))
                 Xf = jax.device_put(Xs.reshape(-1, 36), sh)
                 Zf = jax.device_put(ss.Z.reshape(-1, Km), sh)
@@ -151,7 +151,8 @@ def test_moe_a2a_matches_gather_dispatch():
     large): same forward output, same aux loss, on a (data=2, model=2) mesh."""
     out = run_with_devices("""
         import dataclasses, numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, AxisType
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.configs import get_config
         from repro.models import init_model, ActSpecs
         from repro.models.moe import moe_apply
@@ -169,9 +170,9 @@ def test_moe_a2a_matches_gather_dispatch():
         cfg_g = dataclasses.replace(cfg, moe_impl='gather')
         y_ref, aux_ref = moe_apply(p, x, cfg_g)
 
-        mesh = jax.make_mesh((2, 2), ('data', 'model'),
-                             axis_types=(AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((2, 2), ('data', 'model'),
+                         axis_types=(AxisType.Auto,) * 2)
+        with set_mesh(mesh):
             specs = act_specs(mesh, seq_len=8, batch=4, mode='train')
             cfg_a = dataclasses.replace(cfg, moe_impl='a2a')
             y_a2a, aux_a2a = jax.jit(
@@ -185,7 +186,7 @@ def test_moe_a2a_matches_gather_dispatch():
         def loss(p, x):
             y, aux = moe_apply(p, x, cfg_a, specs=specs)
             return jnp.sum(y * y) + 0.01 * aux
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             g = jax.jit(jax.grad(loss))(p, x)
         assert all(np.all(np.isfinite(v)) for v in jax.tree.leaves(
             jax.tree.map(np.asarray, g)))
@@ -200,7 +201,8 @@ def test_lm_train_step_shards_on_8_devices():
     """A reduced LM train step pjit-shards over a (4, 2) data x model mesh."""
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.configs import get_config
         from repro.models import init_model, make_train_step
         from repro.models.transformer import ActSpecs
@@ -211,9 +213,9 @@ def test_lm_train_step_shards_on_8_devices():
         cfg = get_config('granite-3-8b', smoke=True)
         cfg = dataclasses.replace(cfg, d_model=64, n_heads=4, n_kv_heads=2,
                                   d_ff=128)
-        mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                             axis_types=(AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((4, 2), ('data', 'model'),
+                         axis_types=(AxisType.Auto,) * 2)
+        with set_mesh(mesh):
             holder = {}
             def build(k):
                 p, s = init_model(k, cfg)
@@ -236,3 +238,33 @@ def test_lm_train_step_shards_on_8_devices():
             print('OK sharded loss', float(m['loss']))
     """)
     assert "OK sharded" in out
+
+
+def test_driver_shardmap_backend_selectable():
+    """MCMCDriver with driver='shardmap' runs the production collective path
+    end to end (checkpointing included) on 8 forced host devices, and its
+    checkpoints remain interchangeable with the vmap backend."""
+    out = run_with_devices("""
+        import dataclasses, tempfile, numpy as np
+        from repro.core.ibp import IBPHypers
+        from repro.data import cambridge_data
+        from repro.runtime import DriverConfig, MCMCDriver
+        X, _, _ = cambridge_data(N=96, seed=5)
+        d = tempfile.mkdtemp()
+        cfg = DriverConfig(P=8, K_max=16, K_tail=6, L=3, n_iters=20,
+                           ckpt_every=10, eval_every=10, driver='shardmap',
+                           stale_sync=1, ckpt_dir=d)
+        drv = MCMCDriver(X, cfg, IBPHypers())
+        gs, ss = drv.run()
+        K = int(gs.active.sum()); sx = float(gs.sigma_x)
+        assert 2 <= K <= 10, K
+        assert 0.3 <= sx <= 0.8, sx
+        assert ss.Z.shape[0] == 8
+        assert 'sigma_x_rhat' in drv.history[-1]
+        # same checkpoint resumes on the vmap backend (elastic P too)
+        cfg_v = dataclasses.replace(cfg, driver='vmap', P=4, n_iters=25)
+        gs2, ss2 = MCMCDriver(X, cfg_v, IBPHypers()).run()
+        assert int(gs2.it) == 25 and ss2.Z.shape[0] == 4
+        print('OK shardmap driver', K, sx)
+    """)
+    assert "OK shardmap driver" in out

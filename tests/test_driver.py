@@ -1,0 +1,172 @@
+"""MCMCDriver backend/knob coverage: the K_max-overflow checkpoint-and-grow
+restart, the bounded-staleness knob, multichain checkpoint/resume
+(bitwise), and diagnostics in eval records."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step
+from repro.core.ibp import IBPHypers
+from repro.data import cambridge_data
+from repro.runtime import DriverConfig, MCMCDriver
+
+
+@pytest.fixture(scope="module")
+def data():
+    X, _, _ = cambridge_data(N=48, sigma_n=0.4, seed=3)
+    return X
+
+
+def test_kmax_overflow_checkpoints_then_grows(data, tmp_path):
+    """Feature-slot overflow checkpoints + raises; restarting with a larger
+    K_max pads the checkpointed feature axis and resumes (never silent
+    truncation) — DESIGN.md §10."""
+    cfg = DriverConfig(P=3, K_max=2, K_tail=6, K_init=1, L=3, n_iters=40,
+                      ckpt_every=1000, eval_every=1000,
+                      ckpt_dir=str(tmp_path))
+    with pytest.raises(RuntimeError, match="overflow"):
+        MCMCDriver(data, cfg, IBPHypers()).run()
+    step = latest_step(str(tmp_path))
+    assert step is not None  # overflow wrote a checkpoint first
+
+    # grow-and-restart until the run completes (capacity doubles each time)
+    K = cfg.K_max
+    for _ in range(4):
+        K *= 2
+        try:
+            gs, ss = MCMCDriver(
+                data, dataclasses.replace(cfg, K_max=K), IBPHypers()
+            ).run()
+            break
+        except RuntimeError:
+            continue
+    else:
+        pytest.fail("growth never reached sufficient capacity")
+    assert int(gs.it) == 40
+    assert ss.Z.shape[-1] == K            # feature axis actually grew
+    assert int(jnp.max(gs.overflow)) == 0
+    assert int(gs.active.sum()) >= 1
+
+
+def test_stale_sync_knob_runs_and_differs(data, tmp_path):
+    """stale_sync > 0 interleaves sync-free sub-iteration passes: the run
+    stays finite/sane but takes a different (non-exact) trajectory."""
+    mk = lambda sub, s: DriverConfig(
+        P=3, K_max=12, K_tail=6, L=2, n_iters=8, ckpt_every=1000,
+        eval_every=1000, stale_sync=s, ckpt_dir=str(tmp_path / sub))
+    gs0, _ = MCMCDriver(data, mk("a", 0), IBPHypers()).run()
+    gs2, _ = MCMCDriver(data, mk("b", 2), IBPHypers()).run()
+    assert np.isfinite(float(gs2.sigma_x))
+    assert 1 <= int(gs2.active.sum()) <= 12
+    # the stale trajectory consumed different randomness -> different state
+    assert float(gs0.sigma_x) != float(gs2.sigma_x)
+
+
+def test_stale_pass_key_advance_distinct_from_consumed_stream(data):
+    """Regression pin: the key a stale pass hands forward (fold 14) must
+    differ from the key its sweeps consumed (fold 13) — otherwise the next
+    iteration's sub-iterations replay the same per-(shard, l) uniforms."""
+    from repro.core.ibp import hybrid_stale_pass, init_hybrid
+    from repro.data import shard_rows
+
+    Xs = jnp.asarray(shard_rows(data, 3))
+    gs, ss = init_hybrid(jax.random.key(0), Xs, 12, K_tail=6, K_init=3)
+    gs2, _ = hybrid_stale_pass(Xs, gs, ss, IBPHypers(), L=2, N_global=48)
+    kd = lambda k: np.asarray(jax.random.key_data(k))
+    assert not np.array_equal(kd(gs2.key),
+                              kd(jax.random.fold_in(gs.key, 13)))
+    np.testing.assert_array_equal(kd(gs2.key),
+                                  kd(jax.random.fold_in(gs.key, 14)))
+
+
+def test_stale_pass_shardmap_matches_vmap(data):
+    """The collective-free shard_map stale pass is bitwise-equivalent to
+    the vmap stale pass (P=1 mesh runs in-process on one device)."""
+    from repro.core.ibp import (hybrid_stale_pass, init_hybrid,
+                                make_hybrid_stale_pass_shardmap)
+    from repro.compat import make_mesh
+    from repro.data import shard_rows
+
+    N_, K, Kt = 48, 12, 6
+    Xs = jnp.asarray(shard_rows(data, 1))
+    gs, ss = init_hybrid(jax.random.key(4), Xs, K, K_tail=Kt, K_init=3)
+    gs_v, ss_v = hybrid_stale_pass(Xs, gs, ss, IBPHypers(), L=2,
+                                   N_global=N_)
+    mesh = make_mesh((1,), ("data",))
+    stale = make_hybrid_stale_pass_shardmap(mesh, ("data",), L=2,
+                                            N_global=N_)
+    gs_s, Zf, Zt, ta = stale(Xs.reshape(N_, -1), gs, ss.Z.reshape(N_, K),
+                             ss.Z_tail.reshape(N_, Kt), ss.tail_active)
+    np.testing.assert_array_equal(np.asarray(ss_v.Z.reshape(N_, K)),
+                                  np.asarray(Zf))
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(gs_v.key)),
+        np.asarray(jax.random.key_data(gs_s.key)))
+
+
+def test_multichain_resumes_bitwise_from_checkpoint(data, tmp_path):
+    """Straight-through multichain run == crash/resume run, bitwise, for
+    every chain (the checkpoint carries the per-chain keys)."""
+    mk = lambda sub, n: DriverConfig(
+        P=3, K_max=12, K_tail=6, L=3, n_iters=n, ckpt_every=5,
+        eval_every=100, driver="multichain", n_chains=3,
+        ckpt_dir=str(tmp_path / sub))
+    gs_a, ss_a = MCMCDriver(data, mk("full", 10), IBPHypers()).run()
+    MCMCDriver(data, mk("half", 5), IBPHypers()).run()
+    gs_b, ss_b = MCMCDriver(data, mk("half", 10), IBPHypers()).run()
+    np.testing.assert_array_equal(np.asarray(ss_a.Z), np.asarray(ss_b.Z))
+    np.testing.assert_array_equal(np.asarray(gs_a.sigma_x),
+                                  np.asarray(gs_b.sigma_x))
+    np.testing.assert_array_equal(np.asarray(gs_a.A), np.asarray(gs_b.A))
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(gs_a.key)),
+        np.asarray(jax.random.key_data(gs_b.key)))
+
+
+def test_multichain_eval_records_diagnostics(data, tmp_path):
+    """C >= 4 vectorized chains advance in one jitted step and eval
+    records carry split-R-hat / ESS / MCSE plus per-chain stats."""
+    cfg = DriverConfig(P=3, K_max=12, K_tail=6, L=3, n_iters=16,
+                      ckpt_every=1000, eval_every=8, driver="multichain",
+                      n_chains=4, ckpt_dir=str(tmp_path))
+    drv = MCMCDriver(data, cfg, IBPHypers())
+    gs, ss = drv.run()
+    assert ss.Z.shape[0] == 4             # chain axis
+    rec = drv.history[-1]
+    for k in ("sigma_x_rhat", "sigma_x_ess", "sigma_x_mcse", "K_rhat"):
+        assert k in rec, rec.keys()
+    assert len(rec["K_chains"]) == 4
+    assert len(rec["sigma_x_chains"]) == 4
+    # chains are genuinely independent: distinct trajectories
+    assert len({round(s, 6) for s in rec["sigma_x_chains"]}) > 1
+    # trace has one (C,) row per iteration
+    assert len(drv.trace["sigma_x"]) == 16
+    assert drv.trace["sigma_x"][0].shape == (4,)
+
+
+def test_checkpoint_interchange_vmap_to_multichain_rejected(data, tmp_path):
+    """A single-chain checkpoint cannot silently restore under a
+    chain-batched template — leaf shapes disagree loudly."""
+    cfg = DriverConfig(P=3, K_max=12, K_tail=6, L=2, n_iters=4,
+                      ckpt_every=2, eval_every=100, ckpt_dir=str(tmp_path))
+    MCMCDriver(data, cfg, IBPHypers()).run()
+    cfg_mc = dataclasses.replace(cfg, driver="multichain", n_chains=2,
+                                 n_iters=6)
+    with pytest.raises(ValueError, match="chain"):
+        MCMCDriver(data, cfg_mc, IBPHypers()).run()
+
+
+def test_multichain_resume_rejects_changed_chain_count(data, tmp_path):
+    """n_chains is part of the checkpointed state: resuming with a
+    different chain count fails loudly instead of silently keeping the
+    old C while diagnostics claim the new one."""
+    mk = lambda c, n: DriverConfig(
+        P=3, K_max=12, K_tail=6, L=2, n_iters=n, ckpt_every=2,
+        eval_every=100, driver="multichain", n_chains=c,
+        ckpt_dir=str(tmp_path))
+    MCMCDriver(data, mk(3, 4), IBPHypers()).run()
+    with pytest.raises(ValueError, match="n_chains"):
+        MCMCDriver(data, mk(8, 8), IBPHypers()).run()

@@ -1,10 +1,12 @@
-"""Per-kernel allclose vs pure-jnp oracle: shape & dtype sweeps + hypothesis
-property tests (interpret=True executes the Pallas body on CPU)."""
+"""Per-kernel allclose vs pure-jnp oracle: shape & dtype sweeps + property
+tests (interpret=True executes the Pallas body on CPU). Property tests use
+hypothesis when installed, else a fixed-seed parametrized fallback
+(tests/_hyp_compat.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given_or_params
 
 from repro.kernels.feature_stats import feature_stats, feature_stats_ref
 from repro.kernels.gaussian_sse import gaussian_sse, gaussian_sse_ref
@@ -59,13 +61,8 @@ def test_gaussian_sse_matches_ref(N, D, K, dtype):
 # ---------------------------------------------------------------------------
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    n=st.integers(5, 70),
-    d=st.integers(2, 40),
-    k=st.integers(1, 12),
-    seed=st.integers(0, 10_000),
-)
+@given_or_params(max_examples=20, n=(5, 70), d=(2, 40), k=(1, 12),
+                 seed=(0, 10_000))
 def test_gibbs_flip_property_binary_and_active_respected(n, d, k, seed):
     X, Z, A, act, rng = _inputs(n, d, k, seed=seed)
     lpi = jnp.asarray(rng.standard_normal(k), jnp.float32)
@@ -82,13 +79,8 @@ def test_gibbs_flip_property_binary_and_active_respected(n, d, k, seed):
     np.testing.assert_array_equal(out_np, want)
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    n=st.integers(5, 60),
-    d=st.integers(2, 30),
-    k=st.integers(1, 10),
-    seed=st.integers(0, 10_000),
-)
+@given_or_params(max_examples=20, n=(5, 60), d=(2, 30), k=(1, 10),
+                 seed=(0, 10_000))
 def test_feature_stats_property_psd_and_counts(n, d, k, seed):
     X, Z, _, _, _ = _inputs(n, d, k, seed=seed)
     ztz, ztx, m = feature_stats(X, Z, block_n=32)
@@ -100,13 +92,8 @@ def test_feature_stats_property_psd_and_counts(n, d, k, seed):
     assert np.all(np.asarray(m) <= n)
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    n=st.integers(5, 60),
-    d=st.integers(2, 30),
-    k=st.integers(1, 10),
-    seed=st.integers(0, 10_000),
-)
+@given_or_params(max_examples=20, n=(5, 60), d=(2, 30), k=(1, 10),
+                 seed=(0, 10_000))
 def test_gaussian_sse_property_nonneg_and_zero_residual(n, d, k, seed):
     X, Z, A, act, _ = _inputs(n, d, k, seed=seed)
     s = gaussian_sse(X, Z, A, act, block_n=32)

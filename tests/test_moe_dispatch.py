@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given_or_params
 
 from repro.core.ibp import math as ibm
 from repro.models.moe import _dispatch_tables, _route
@@ -21,14 +21,8 @@ def _routing(T, E, k, seed):
     return gv, ei, counts
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    T=st.integers(4, 64),
-    E=st.integers(2, 16),
-    k=st.integers(1, 3),
-    cf=st.floats(0.5, 4.0),
-    seed=st.integers(0, 99),
-)
+@given_or_params(max_examples=20, T=(4, 64), E=(2, 16), k=(1, 3),
+                 cf=(0.5, 4.0), seed=(0, 99))
 def test_dispatch_table_invariants(T, E, k, cf, seed):
     k = min(k, E)
     gv, ei, counts = _routing(T, E, k, seed)
@@ -59,13 +53,8 @@ def test_dispatch_table_invariants(T, E, k, cf, seed):
         assert kept == T * k
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    N=st.integers(4, 40),
-    D=st.integers(2, 12),
-    K=st.integers(1, 8),
-    seed=st.integers(0, 99),
-)
+@given_or_params(max_examples=15, N=(4, 40), D=(2, 12), K=(1, 8),
+                 seed=(0, 99))
 def test_fused_sync_sse_identity(N, D, K, seed):
     """||X - Z A||^2 == tr(XtX) - 2<A, ZtX> + <A, (ZtZ) A> with masks,
     the identity that lets the fused sync drop the dedicated SSE reduce."""
