@@ -1,0 +1,235 @@
+"""Collapsed-sampler perf trajectory: the numbers behind BENCH_<date>.json.
+
+Three measurements (ISSUE 2 / DESIGN.md §12):
+
+* ``bench_collapsed``  — full collapsed sweep rows/s, ref (fresh O(K^3)
+  factorization per row, the seed path) vs fast (rank-one Cholesky carry),
+  at K_max ∈ {16, 32, 64}. The speedup column is the PR's headline number;
+  the ref/fast equivalence test (tests/test_collapsed_fast.py) certifies
+  it is not bought with approximation.
+* ``bench_uncollapsed`` — uncollapsed sweep rows/s per backend (jnp vs
+  pallas). On CPU the Pallas kernel executes in interpret mode, so its
+  number measures validation overhead, not TPU speed — flagged in the
+  payload.
+* ``bench_hybrid_sync`` — full hybrid iteration wall time, staged vs fused
+  master sync, on P forced host devices in a subprocess (same pattern as
+  benchmarks/scaling.py; shared-core, so it measures collective count
+  overhead, not speedup).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _sweep_time(backend: str, X, K_max: int, refresh: int, iters: int,
+                warm: int) -> tuple[float, int]:
+    from repro.core.ibp import IBPHypers, collapsed_sweep
+    from repro.core.ibp.state import init_state
+
+    hyp = IBPHypers()
+    N = X.shape[0]
+    st = init_state(jax.random.key(0), N, X.shape[1], K_max=K_max, K_init=8)
+    for _ in range(warm):
+        st = collapsed_sweep(st, X, hyp, backend=backend,
+                             refresh_every=refresh)
+    jax.block_until_ready(st.Z)
+    t0 = time.time()
+    for _ in range(iters):
+        st = collapsed_sweep(st, X, hyp, backend=backend,
+                             refresh_every=refresh)
+    jax.block_until_ready(st.Z)
+    return (time.time() - t0) / iters, int(st.active.sum())
+
+
+def _data(N: int, D: int):
+    from repro.data import cambridge_data
+
+    X, _, _ = cambridge_data(N=N, sigma_n=0.4, seed=1)
+    reps = -(-D // X.shape[1])  # ceil
+    return jnp.asarray(np.tile(X, (1, reps))[:, :D].astype(np.float32))
+
+
+def bench_collapsed(N: int, D: int, Ks, refresh: int, iters: int,
+                    warm: int, repeats: int = 2) -> list[dict]:
+    """rows/s of the full collapsed sweep, ref vs fast, per K_max."""
+    X = _data(N, D)
+    out = []
+    for K in Ks:
+        t_ref = min(_sweep_time("ref", X, K, refresh, iters, warm)[0]
+                    for _ in range(repeats))
+        t_fast, k_plus = min(
+            (_sweep_time("fast", X, K, refresh, iters, warm)
+             for _ in range(repeats)),
+            key=lambda r: r[0],
+        )
+        out.append({
+            "K_max": K,
+            "K_plus": k_plus,
+            "ref_rows_per_s": N / t_ref,
+            "fast_rows_per_s": N / t_fast,
+            "ref_ms_per_sweep": t_ref * 1e3,
+            "fast_ms_per_sweep": t_fast * 1e3,
+            "speedup": t_ref / t_fast,
+        })
+    return out
+
+
+def bench_uncollapsed(N: int, D: int, K: int, iters: int,
+                      pallas_rows: int = 128) -> list[dict]:
+    """rows/s of one uncollapsed Z sweep per backend."""
+    from repro.core.ibp.sweeps import uncollapsed_sweep
+
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.standard_normal((K, D)), jnp.float32)
+    pi = jnp.full((K,), 0.3, jnp.float32)
+    act = jnp.ones((K,), jnp.float32)
+    out = []
+    for backend in ("jnp", "pallas"):
+        n = N if backend == "jnp" else min(N, pallas_rows)  # interpret is slow
+        X = jnp.asarray(rng.standard_normal((n, D)), jnp.float32)
+        Z = jnp.asarray((rng.random((n, K)) < 0.3), jnp.float32)
+        f = jax.jit(lambda Z, k, be=backend, X=X: uncollapsed_sweep(
+            X, Z, A, pi, act, jnp.float32(1.0), k, backend=be))
+        Z2 = jax.block_until_ready(f(Z, jax.random.key(0)))
+        t0 = time.time()
+        for i in range(iters):
+            Z2 = f(Z2, jax.random.key(i))
+        jax.block_until_ready(Z2)
+        dt = (time.time() - t0) / iters
+        out.append({
+            "backend": backend,
+            "rows": n,
+            "rows_per_s": n / dt,
+            "interpreted": backend == "pallas"
+            and jax.default_backend() != "tpu",
+        })
+    return out
+
+
+def bench_hybrid_sync(N: int, P: int, iters: int, K_max: int = 32,
+                      L: int = 2) -> dict | None:
+    """staged vs fused master sync, P forced host devices (subprocess)."""
+    code = textwrap.dedent(f"""
+        import json, time, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.data import cambridge_data, shard_rows
+        from repro.core.ibp import IBPHypers, init_hybrid, \\
+            make_hybrid_iteration_shardmap
+        from repro.compat import make_mesh
+        X, _, _ = cambridge_data(N={N}, seed=0)
+        Pn = {P}
+        Xs = jnp.asarray(shard_rows(X, Pn))
+        mesh = make_mesh((Pn,), ("data",))
+        out = {{}}
+        for sync in ("staged", "fused"):
+            gs, ss = init_hybrid(jax.random.key(0), Xs, {K_max}, K_tail=8,
+                                 K_init=4)
+            step = make_hybrid_iteration_shardmap(
+                mesh, ("data",), IBPHypers(), L={L}, N_global={N}, sync=sync)
+            sh = NamedSharding(mesh, P("data"))
+            Xf = jax.device_put(Xs.reshape({N}, -1), sh)
+            Zf = jax.device_put(ss.Z.reshape({N}, -1), sh)
+            Zt = jax.device_put(ss.Z_tail.reshape({N}, -1), sh)
+            ta = jax.device_put(ss.tail_active, sh)
+            gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)
+            jax.block_until_ready(Zf)
+            t0 = time.time()
+            for _ in range({iters}):
+                gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)
+            jax.block_until_ready(Zf)
+            out[sync + "_s"] = (time.time() - t0) / {iters}
+        print("BENCH_JSON:" + json.dumps(out))
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={P}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    try:
+        res = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, timeout=900)
+        for line in res.stdout.splitlines():
+            if line.startswith("BENCH_JSON:"):
+                d = json.loads(line[len("BENCH_JSON:"):])
+                d.update({"P": P, "N": N, "K_max": K_max, "L": L})
+                return d
+        print(res.stdout[-2000:], res.stderr[-2000:], file=sys.stderr)
+    except subprocess.TimeoutExpired:
+        print("hybrid_sync subprocess timed out", file=sys.stderr)
+    return None
+
+
+def main(argv=None) -> tuple[list[str], dict]:
+    """Returns (csv_lines, BENCH payload)."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--N", type=int, default=512)
+    ap.add_argument("--D", type=int, default=64)
+    ap.add_argument("--Ks", type=int, nargs="+", default=[16, 32, 64])
+    ap.add_argument("--refresh", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--warm", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="take the min over this many timing repeats "
+                         "(shared-CPU noise floor)")
+    ap.add_argument("--skip-hybrid-sync", action="store_true")
+    ap.add_argument("--P", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    csv: list[str] = []
+    payload: dict = {
+        "collapsed_sweep": {
+            "N": args.N, "D": args.D, "refresh_every": args.refresh,
+            "results": bench_collapsed(args.N, args.D, args.Ks, args.refresh,
+                                       args.iters, args.warm,
+                                       repeats=args.repeats),
+        },
+    }
+    for r in payload["collapsed_sweep"]["results"]:
+        csv.append(
+            f"collapsed_sweep__K{r['K_max']},"
+            f"{r['fast_ms_per_sweep'] * 1e3:.0f},"
+            f"ref_ms={r['ref_ms_per_sweep']:.1f};speedup={r['speedup']:.2f}x"
+        )
+        print(csv[-1], flush=True)
+
+    payload["uncollapsed_sweep"] = {
+        "D": args.D, "K": max(args.Ks),
+        "results": bench_uncollapsed(args.N, args.D, max(args.Ks),
+                                     args.iters),
+    }
+    for r in payload["uncollapsed_sweep"]["results"]:
+        csv.append(
+            f"uncollapsed_sweep__{r['backend']},"
+            f"{r['rows'] / r['rows_per_s'] * 1e6:.0f},"
+            f"rows_per_s={r['rows_per_s']:.0f}"
+            f"{';interpreted' if r['interpreted'] else ''}"
+        )
+        print(csv[-1], flush=True)
+
+    if not args.skip_hybrid_sync:
+        hs = bench_hybrid_sync(min(args.N, 256), args.P, args.iters)
+        if hs:
+            payload["hybrid_sync"] = hs
+            csv.append(
+                f"hybrid_sync__P{hs['P']},"
+                f"{hs['staged_s'] * 1e6:.0f},"
+                f"fused_us={hs['fused_s'] * 1e6:.0f}"
+            )
+            print(csv[-1], flush=True)
+    return csv, payload
+
+
+if __name__ == "__main__":
+    main()

@@ -1,31 +1,59 @@
 """Benchmark harness: one entry per paper table/figure + framework benches.
 
-``python -m benchmarks.run [--quick] [--only fig1,fig2,kernels,scaling,roofline]``
+``python -m benchmarks.run [--quick|--smoke] [--only fig1,fig2,kernels,collapsed,scaling,roofline]``
 
 Prints a ``name,us_per_call,derived`` CSV block at the end (the harness
-contract). Individual benchmarks are importable modules with their own CLIs
-for full-size runs; this runner uses CPU-sized defaults.
+contract) and writes a machine-readable ``BENCH_<iso-date>.json`` at the
+repo root (the durable perf trajectory: collapsed sweep ref-vs-fast
+rows/s per K, uncollapsed rows/s per backend, hybrid staged-vs-fused
+sync). ``--smoke`` runs the kernels + collapsed sections at tiny sizes
+and FAILS (exit 1) if the fast collapsed row step is below the
+``SMOKE_MIN_SPEEDUP``x gate vs the ref path at K=64 — the CI perf gate.
+Individual benchmarks are importable modules with their own CLIs for
+full-size runs; this runner uses CPU-sized defaults.
 """
 from __future__ import annotations
 
 import argparse
+import datetime
+import json
+import os
 import sys
 import time
 import traceback
+
+SMOKE_MIN_SPEEDUP = 2.0  # fast vs ref collapsed sweep at K=64, CPU
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _section(title: str):
     print(f"\n===== {title} " + "=" * max(0, 60 - len(title)), flush=True)
 
 
+def _write_bench_json(payload: dict) -> str:
+    path = os.path.join(
+        REPO_ROOT, f"BENCH_{datetime.date.today().isoformat()}.json"
+    )
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"perf trajectory -> {path}", flush=True)
+    return path
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="smallest sizes (CI smoke)")
+                    help="smallest sizes for every section")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI perf smoke: kernels + collapsed only, tiny "
+                         "sizes, enforce the fast>=2x ref gate at K=64")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of "
-                         "fig1,fig2,kernels,scaling,roofline")
+                         "fig1,fig2,kernels,collapsed,scaling,roofline")
     args = ap.parse_args(argv)
+    if args.smoke and not args.only:
+        args.only = "kernels,collapsed"
+        args.quick = True
     only = set(filter(None, args.only.split(",")))
 
     def want(name: str) -> bool:
@@ -33,15 +61,53 @@ def main(argv=None) -> int:
 
     csv: list[str] = []
     failures: list[str] = []
+    import jax
+
+    bench: dict = {
+        "date": datetime.date.today().isoformat(),
+        "mode": "smoke" if args.smoke else ("quick" if args.quick else "full"),
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
     t_all = time.time()
 
     if want("kernels"):
         _section("kernels: Pallas vs jnp-oracle + arithmetic intensity")
         from benchmarks import kernels
         try:
-            csv += kernels.main(["--N", "1024"] if args.quick else [])
+            lines = kernels.main(["--N", "1024"] if args.quick else [])
+            csv += lines
+            bench["kernels"] = lines
         except Exception:
             failures.append("kernels")
+            traceback.print_exc()
+
+    if want("collapsed"):
+        _section("collapsed: O(K^3) ref vs rank-one-carry fast trajectory")
+        from benchmarks import collapsed
+        try:
+            col_args = (["--N", "128", "--D", "32", "--Ks", "16", "64",
+                         "--iters", "2", "--warm", "2",
+                         "--skip-hybrid-sync"]
+                        if args.smoke else
+                        (["--N", "256", "--iters", "3", "--warm", "2"]
+                         if args.quick else []))
+            lines, payload = collapsed.main(col_args)
+            csv += lines
+            bench.update(payload)
+            k64 = [r for r in payload["collapsed_sweep"]["results"]
+                   if r["K_max"] == 64]
+            if args.smoke:
+                if not k64:  # fail closed: the gate must never be vacuous
+                    failures.append("collapsed perf gate: no K=64 row")
+                elif k64[0]["speedup"] < SMOKE_MIN_SPEEDUP:
+                    failures.append(
+                        f"collapsed perf gate: fast is "
+                        f"{k64[0]['speedup']:.2f}x ref at K=64 "
+                        f"(< {SMOKE_MIN_SPEEDUP}x)"
+                    )
+        except Exception:
+            failures.append("collapsed")
             traceback.print_exc()
 
     if want("fig1"):
@@ -102,6 +168,8 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     for line in csv:
         print(line)
+    if "collapsed_sweep" in bench or "kernels" in bench:
+        _write_bench_json(bench)
     if failures:
         print(f"\nFAILED sections: {failures}", file=sys.stderr)
         return 1

@@ -6,21 +6,45 @@ integrated out. For each row n we use the posterior-predictive form
     x_n | z_n, Z_-n, X_-n ~ N( z_n H_-,  sigma_x^2 (1 + z_n M_- z_n^T) I )
 
 with M_- = (Z_-^T Z_- + (sx^2/sa^2) I)^{-1}, H_- = M_- Z_-^T X_-, which makes
-each bit flip O(K + D) after one O(K^3 + K^2 D) per-row factorization.
+each bit flip O(K + D) after the per-row posterior map is in hand.
 New dishes use the exact truncated-Gibbs step: row-n singletons are dropped
 and j_new ~ P(j | rest) ∝ Poisson(j; alpha/N) · lik(j) over j = 0..J_MAX
 (lik(j) closed-form: new columns only add j·sa^2 to the predictive variance).
 
-Everything is padded to K_max with an ``active`` mask. Complexity per sweep:
-O(N (K^3 + K^2 D)) — the quadratic-in-N cost the paper attributes to the
-collapsed sampler comes from K growing as alpha·log N plus serial row scans.
+Everything is padded to K_max with an ``active`` mask.
+
+Two row-step backends (DESIGN.md §12), selected by ``backend=``:
+
+* ``"ref"``  — fresh O(K^3 + K^2 D) Cholesky factorization per row (the
+  original sampler; kept as the exact oracle the fast path is tested
+  against). Per sweep: O(N (K^3 + K^2 D)).
+* ``"fast"`` — the factorization is CARRIED across the row scan and moved
+  between rows by rank-one Cholesky up/downdates + Sherman–Morrison:
+  remove-row = one downdate, singleton drop / new dish = diagonal
+  identity swaps (the affected row/col of W is exactly ratio·e_k), add-row
+  = one update; H moves by the matching rank-one corrections. O(K^2 + K D)
+  algorithmic work per row — though two rewrites deliberately trade big-O
+  for BLAS constants: the up/downdate prefix sums go through a K^3 tril
+  GEMM and the packed flip recomputes G = H Hᵀ (K^2 D) per row, both
+  faster in wall-clock than their asymptotically-smaller forms at our K
+  (DESIGN.md §12; carrying G rank-one would restore the strict bound).
+  An exact refactorization every ``refresh_every`` rows plus a drift
+  monitor (probe residual ‖M W p − p‖_∞ against the exactly maintained
+  integer sufficient statistics, and the downdate's loss-of-positivity
+  canary) force an early refresh when the carry degrades.
+* ``"pallas"`` — the fast path with the K-sequential bit-flip recurrence
+  executed by the ``kernels/collapsed_row`` Pallas kernel (VMEM-resident
+  carry; compiled on TPU, interpret elsewhere).
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.collapsed_row import collapsed_row_flip
 
 from . import math as ibm
 from .state import IBPHypers, IBPState
@@ -29,21 +53,63 @@ Array = jax.Array
 
 J_MAX = 4  # truncation for per-row new-dish draws (P(j>4 | alpha/N) is negligible)
 
+COLLAPSED_BACKENDS = ("ref", "fast", "pallas")
+DEFAULT_REFRESH = 64    # exact refactorization cadence of the fast path
+DEFAULT_DRIFT_TOL = 1e-2  # probe-residual threshold forcing an early refresh
+PROBE_EVERY = 4         # drift-probe cadence within the refresh window
+
 
 def _log_poisson(j: Array, lam: Array) -> Array:
     return j * jnp.log(lam) - lam - jax.lax.lgamma(j + 1.0)
 
 
-def _row_step(carry, n, *, X, N, D, birth="gibbs"):
-    """Resample row n's bits + new dishes, collapsed.
+def _sample_dishes(kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D,
+                   birth):
+    """Shared new-dish move: returns (z', active', newbits).
 
-    ``birth`` selects the new-dish move:
+    ``birth`` selects the move:
       * "gibbs" — exact truncated Gibbs over j ∈ 0..J_MAX (G&G; collapsed
         baseline).
       * "mh" — the paper's Metropolis-Hastings move for the hybrid tail:
         propose j ~ Poisson(alpha/N) and accept with the marginal-likelihood
         ratio (prior ∝ proposal, so they cancel). Out-of-capacity proposals
         are rejected.
+    """
+    inv2s2 = 0.5 / (sx**2)
+    lam = alpha / N
+    s = 1.0 + q
+    r = x_n - mean
+    rss = jnp.dot(r, r)
+    js = jnp.arange(J_MAX + 1, dtype=x_n.dtype)
+    rho = (sa / sx) ** 2
+    s_j = s + js * rho
+    ll_j = -0.5 * D * jnp.log(s_j) - inv2s2 * rss / s_j
+    free = 1.0 - jnp.maximum(active_m, z)
+    n_free = jnp.sum(free)
+    if birth == "gibbs":
+        # exact truncated Gibbs: j ~ ∝ Poisson(j; lam) lik(j)
+        logits = _log_poisson(js, lam) + ll_j
+        logits = jnp.where(js <= n_free, logits, -jnp.inf)
+        j_new = jax.random.categorical(kdish, logits).astype(x_n.dtype)
+    else:
+        # paper's MH: propose j ~ Poisson(lam), accept w.p. lik(j)/lik(0)
+        kprop, kacc = jax.random.split(kdish)
+        j_prop = jax.random.poisson(kprop, lam).astype(x_n.dtype)
+        ok = (j_prop <= jnp.minimum(float(J_MAX), n_free))
+        j_idx = jnp.clip(j_prop, 0, J_MAX).astype(jnp.int32)
+        dll = ll_j[j_idx] - ll_j[0]
+        acc = jnp.log(jax.random.uniform(kacc, (), dtype=x_n.dtype)) < dll
+        j_new = jnp.where(ok & acc, j_prop, 0.0)
+    # place new dishes in the first j_new free slots
+    free_rank = jnp.cumsum(free) * free  # 1-indexed rank among free slots
+    newbits = ((free_rank >= 1.0) & (free_rank <= j_new)).astype(z.dtype)
+    z = z + newbits
+    active_new = jnp.maximum(active_m, newbits)
+    return z, active_new, newbits
+
+
+def _row_step(carry, n, *, X, N, D, birth="gibbs"):
+    """Resample row n's bits + new dishes, collapsed — the O(K^3) oracle.
 
     ``N`` is the GLOBAL number of observations — in the hybrid sampler the
     tail runs on processor p' with local rows but global-N priors
@@ -62,7 +128,7 @@ def _row_step(carry, n, *, X, N, D, birth="gibbs"):
     singleton = active * (m_minus <= 0.5) * z
     z = z * (1.0 - singleton)
     active_m = active * (1.0 - (active * (m_minus <= 0.5)))  # live cols w/ support
-    # ---- per-row factorization (exact; avoids rank-1 drift)
+    # ---- per-row factorization (exact; no carried state)
     ratio = (sx / sa) ** 2
     W = ibm.padded_W(ZtZ_m, active_m, ratio)
     M, _ = ibm.chol_inv_logdet(W)
@@ -78,71 +144,15 @@ def _row_step(carry, n, *, X, N, D, birth="gibbs"):
     uu = jnp.clip(jax.random.uniform(kbits, (K,), dtype=X.dtype), 1e-7, 1.0 - 1e-7)
     u = jnp.log(uu) - jnp.log1p(-uu)  # logit(U): accept z=1 iff logodds > u
 
-    def bit_body(c, k):
-        z, v, q, mean = c
-        zk = z[k]
-        Mk = M[:, k]
-        Mkk = M[k, k]
-        Hk = H[k]
-        # state with bit k = 0
-        v0 = v - zk * Mk
-        q0 = q - zk * (2.0 * v[k] - Mkk)
-        mean0 = mean - zk * Hk
-        # state with bit k = 1
-        v1 = v0 + Mk
-        q1 = q0 + 2.0 * v0[k] + Mkk
-        mean1 = mean0 + Hk
-        s0 = 1.0 + q0
-        s1 = 1.0 + q1
-        r0 = x_n - mean0
-        r1 = x_n - mean1
-        ll0 = -0.5 * D * jnp.log(s0) - inv2s2 * jnp.dot(r0, r0) / s0
-        ll1 = -0.5 * D * jnp.log(s1) - inv2s2 * jnp.dot(r1, r1) / s1
-        mk = m_minus[k]
-        logodds = jnp.log(jnp.maximum(mk, 1e-20)) - jnp.log(N - mk) + ll1 - ll0
-        # sample; only live columns with support may flip
-        may = (active_m[k] > 0) & (mk > 0.5)
-        take1 = logodds > u[k]
-        znk = jnp.where(may, take1.astype(z.dtype), z[k])
-        pick1 = znk > 0.5
-        v = jnp.where(pick1, v1, v0)
-        q = jnp.where(pick1, q1, q0)
-        mean = jnp.where(pick1, mean1, mean0)
-        z = z.at[k].set(znk)
-        return (z, v, q, mean), None
-
-    (z, v, q, mean), _ = jax.lax.scan(bit_body, (z, v, q, mean), jnp.arange(K))
+    z, v, q, mean = collapsed_row_flip(
+        M, H, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2,
+        flavor="jnp",
+    )
 
     # ---- new dishes, j = 0..J_MAX
-    lam = alpha / N
-    s = 1.0 + q
-    r = x_n - mean
-    rss = jnp.dot(r, r)
-    js = jnp.arange(J_MAX + 1, dtype=X.dtype)
-    rho = (sa / sx) ** 2
-    s_j = s + js * rho
-    ll_j = -0.5 * D * jnp.log(s_j) - inv2s2 * rss / s_j
-    free = 1.0 - jnp.maximum(active_m, z)
-    n_free = jnp.sum(free)
-    if birth == "gibbs":
-        # exact truncated Gibbs: j ~ ∝ Poisson(j; lam) lik(j)
-        logits = _log_poisson(js, lam) + ll_j
-        logits = jnp.where(js <= n_free, logits, -jnp.inf)
-        j_new = jax.random.categorical(kdish, logits).astype(X.dtype)
-    else:
-        # paper's MH: propose j ~ Poisson(lam), accept w.p. lik(j)/lik(0)
-        kprop, kacc = jax.random.split(kdish)
-        j_prop = jax.random.poisson(kprop, lam).astype(X.dtype)
-        ok = (j_prop <= jnp.minimum(float(J_MAX), n_free))
-        j_idx = jnp.clip(j_prop, 0, J_MAX).astype(jnp.int32)
-        dll = ll_j[j_idx] - ll_j[0]
-        acc = jnp.log(jax.random.uniform(kacc, (), dtype=X.dtype)) < dll
-        j_new = jnp.where(ok & acc, j_prop, 0.0)
-    # place new dishes in the first j_new free slots
-    free_rank = jnp.cumsum(free) * free  # 1-indexed rank among free slots
-    newbits = ((free_rank >= 1.0) & (free_rank <= j_new)).astype(z.dtype)
-    z = z + newbits
-    active_new = jnp.maximum(active_m, newbits)
+    z, active_new, _ = _sample_dishes(
+        kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D, birth
+    )
 
     # ---- add row n back
     m_new = m_minus * active_m + z  # dead/singleton cols contribute 0
@@ -152,8 +162,297 @@ def _row_step(carry, n, *, X, N, D, birth="gibbs"):
     return (Z, active_new, ZtZ_n, ZtX_n, m_new, alpha, sx, sa, key), None
 
 
-@partial(jax.jit, static_argnames=("hyp",))
-def collapsed_sweep(state: IBPState, X: Array, hyp: IBPHypers) -> IBPState:
+class _FastCarry(NamedTuple):
+    """Row-scan carry of the fast backend: sufficient statistics (exact,
+    integer-valued where counts) + the carried factorization of the FULL
+    row set (Lt = (chol W)^T, M = W^{-1} masked, H = M ZtX masked).
+    L is carried transposed so the rank-one moves' cumulative sums run
+    along contiguous rows (see math._chol_rank1_t)."""
+
+    Z: Array
+    active: Array
+    ZtZ: Array
+    ZtX: Array
+    m: Array
+    Lt: Array
+    M: Array
+    H: Array
+    since: Array      # rows since last exact refactorization
+    n_refresh: Array  # monitor/cadence-triggered refactorizations this scan
+    key: Array
+
+
+def _exact_factor(ZtZ, ZtX, active, ratio):
+    """O(K^3 + K^2 D) exact (Lt, M, H) from the sufficient statistics."""
+    W = ibm.padded_W(ZtZ, active, ratio)
+    L, M = ibm.chol_inv(W)
+    M = M * ibm.mask_outer(active)
+    H = M @ (ZtX * active[:, None])
+    return L.T, M, H
+
+
+def _row_step_fast(carry: _FastCarry, n, *, X, N, D, birth, alpha, sx, sa,
+                   refresh_every, drift_tol, flip_flavor):
+    """Resample row n, collapsed, in O(K^2 + K D) via carried factorization.
+
+    Transition algebra (DESIGN.md §12): with z = Z[n] and W carrying ALL
+    rows, remove-row is the rank-one downdate W − z zᵀ, add-row the
+    update W + z zᵀ; the matching Sherman–Morrison moves for M = W⁻¹ and
+    H = M ZᵀX are
+        remove:  M += (Mz)(Mz)ᵀ/δ,  H += (Mz)(zᵀH − x_nᵀ)/δ,  δ = 1 − zᵀMz
+        add:     M −= (Mz)(Mz)ᵀ/δ,  H += (Mz)(x_nᵀ − zᵀH)/δ,  δ = 1 + zᵀMz
+    Singleton drops and new-dish activations touch W only on the identity-
+    vs-ratio diagonal of an exactly-decoupled coordinate (the dropped /
+    appended column has no support in Z_-n, so its W row/col is exactly
+    ratio·e_k), so L, M, H move by row/col masking + a diagonal write —
+    no factorization work.
+
+    Fixed-point shortcut: when the row leaves both its bits and the
+    active set unchanged (the common case after burn-in), remove-row
+    followed by add-row is the IDENTITY on (W, ZtX) — so the pre-removal
+    (Lt, M, H) are carried through untouched instead of round-tripped
+    through a downdate/update pair. This skips the L moves and the
+    add-back Sherman–Morrison entirely AND accrues zero float drift on
+    such rows; only rows that actually change pay the O(K^2) moves. The
+    downdate canary still runs every row (it needs only p and an O(K)
+    cumsum, not the L apply), as does the probe drift monitor.
+    """
+    Z, active, ZtZ, ZtX, m, Lt, M, H, since, n_refresh, key = carry
+    x_n = X[n]
+    z_old = Z[n]
+    ratio = (sx / sa) ** 2
+    # ---- remove row n from the sufficient statistics. The row-deleted
+    # (ZtZ_m, ZtX_m) matrices are NEVER materialized on the hot path: the
+    # probe needs one corrected matvec, the refresh branch (rare) builds
+    # them locally, and the add-back fuses remove+add into one delta.
+    m_minus = m - z_old
+    # ---- remove row n from the posterior map (Sherman–Morrison)
+    zu = z_old * active
+    w = M @ zu
+    # downdate canary WITHOUT applying the L move: p = L^{-1} z comes from
+    # the carried inverse (L^T (M z), a matvec — no triangular solve) and
+    # positive definiteness of W − z z^T is equivalent to all partial
+    # d_j = 1 − cumsum(p^2)_j staying positive
+    p_down = Lt @ w
+    down_ok = jnp.all(1.0 - jnp.cumsum(p_down * p_down) > 1e-12)
+    gamma = jnp.dot(zu, w)
+    delta_s = jnp.maximum(1.0 - gamma, 1e-6)  # guard; probe catches real loss
+    zH = zu @ H
+    # scale the K-vector once, not the K^2/KD outers; the sqrt split keeps
+    # M1 EXACTLY symmetric (the packed flip reads rows as columns)
+    wr = w / jnp.sqrt(delta_s)
+    wd = w / delta_s
+    M1 = M + jnp.outer(wr, wr)
+    H1 = H + jnp.outer(wd, zH - x_n)
+    # ---- singleton drop: decoupled coordinates swap ratio -> identity.
+    # M1/H1 already carry exact zeros on inactive rows/cols, so the mask
+    # is a no-op unless a column actually dropped — gate it.
+    drop = active * (m_minus <= 0.5)
+    z = z_old * (1.0 - drop)
+    active_m = active * (1.0 - drop)
+    has_drop = jnp.any(drop > 0.5)
+
+    def do_drop(ops):
+        M1, H1 = ops
+        keep2 = ibm.mask_outer(active_m)
+        return M1 * keep2, H1 * active_m[:, None]
+
+    M1, H1 = jax.lax.cond(has_drop, do_drop, lambda ops: ops, (M1, H1))
+    # ---- drift monitor + periodic exact refactorization
+    # probe p = active_m against the EXACT integer stats: W_m p collapses to
+    # one matvec (masking + ratio on the diagonal fold into active_m; the
+    # row removal is the O(K) correction -z_old (z_old . p)).
+    # Probed every PROBE_EVERY rows (deterministic): detection is delayed by
+    # at most PROBE_EVERY - 1 rows, the refresh_every bound is unaffected,
+    # and the downdate canary still runs every row.
+    def do_probe(_):
+        tm = ZtZ @ active_m - z_old * jnp.dot(z_old, active_m)
+        probe_t = active_m * tm + ratio * active_m
+        return jnp.max(jnp.abs(M1 @ probe_t - active_m))
+
+    drift = jax.lax.cond(
+        since % PROBE_EVERY == 0, do_probe, lambda _: jnp.zeros((), X.dtype),
+        None,
+    )
+    # NaN-safe: ~(drift <= tol) is True for NaN, (drift > tol) is not
+    need = (since >= refresh_every - 1) | (~down_ok) | (~(drift <= drift_tol))
+
+    def do_refresh(_):
+        ZtZ_m = ZtZ - jnp.outer(z_old, z_old)
+        ZtX_m = ZtX - jnp.outer(z_old, x_n)
+        L2, M2 = ibm.chol_inv(ibm.padded_W(ZtZ_m, active_m, ratio))
+        M2 = M2 * ibm.mask_outer(active_m)
+        return L2.T, M2, M2 @ (ZtX_m * active_m[:, None])
+
+    # Lt_rm is the ROW-REMOVED factor (only materialized on refresh; on the
+    # cheap path the L downdate is deferred into the `changed` branch below)
+    Lt_rm, M1, H1 = jax.lax.cond(
+        need, do_refresh, lambda _: (Lt, M1, H1), None
+    )
+    since = jnp.where(need, 0, since + 1)
+    n_refresh = n_refresh + need.astype(n_refresh.dtype)
+
+    # ---- bit flips (identical recurrence + PRNG stream as the oracle)
+    inv2s2 = 0.5 / (sx**2)
+    K = Z.shape[1]
+    key, kbits, kdish, kslot = jax.random.split(key, 4)
+    uu = jnp.clip(jax.random.uniform(kbits, (K,), dtype=X.dtype), 1e-7, 1.0 - 1e-7)
+    u = jnp.log(uu) - jnp.log1p(-uu)
+
+    # (v, q, mean) of the row-removed state. On the clean path (no drop, no
+    # refresh) they fall out of the Sherman–Morrison vectors already in
+    # hand: v = M1 z = w/δ, q = γ/δ, mean = z H1 = zH + (γ/δ)(zH − x) —
+    # zero extra matvecs. Any drop/refresh invalidates those identities.
+    def vqm_closed(_):
+        gd = gamma / delta_s
+        return wd, gd, zH + gd * (zH - x_n)
+
+    def vqm_matvec(_):
+        v = M1 @ z
+        return v, jnp.dot(z, v), z @ H1
+
+    v, q, mean = jax.lax.cond(
+        has_drop | need, vqm_matvec, vqm_closed, None
+    )
+    z, v, q, mean = collapsed_row_flip(
+        M1, H1, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2,
+        flavor=flip_flavor,
+    )
+
+    # ---- new dishes
+    z, active_new, newbits = _sample_dishes(
+        kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D, birth
+    )
+
+    # ---- add row n back. Stats move only when something moved: unchanged
+    # rows carry (ZtZ, ZtX) through untouched (remove+add is the identity);
+    # changed rows fuse remove+add into one delta; a drop (rare) takes the
+    # masked two-step so the dropped column's row/col is zeroed exactly.
+    m_new = m_minus * active_m + z
+    changed = (
+        need | jnp.any(z != z_old) | jnp.any(active_new != active)
+    )
+
+    def stats_moved(_):
+        def masked(_):
+            return ((ZtZ - jnp.outer(z_old, z_old))
+                    * ibm.mask_outer(active_m) + jnp.outer(z, z),
+                    (ZtX - jnp.outer(z_old, x_n)) * active_m[:, None]
+                    + jnp.outer(z, x_n))
+
+        def fused(_):
+            return (ZtZ + jnp.outer(z, z) - jnp.outer(z_old, z_old),
+                    ZtX + jnp.outer(z - z_old, x_n))
+
+        return jax.lax.cond(has_drop, masked, fused, None)
+
+    ZtZ_n, ZtX_n = jax.lax.cond(
+        changed | has_drop, stats_moved, lambda _: (ZtZ, ZtX), None
+    )
+
+    def apply_moves(_):
+        # the factor really moved: finish remove -> drop -> activate -> add
+        Lt1 = jax.lax.cond(
+            need,
+            lambda __: Lt_rm,  # refresh already produced the removed factor
+            lambda __: ibm.chol_rank1_downdate_t(Lt, p_down)[0],
+            None,
+        )
+
+        # drop/activation diagonal swaps are exact no-ops unless a column
+        # actually dropped or was born this row — gate the K^2 mask work
+        def diag_swaps(ops):
+            Lt1, M1, H1 = ops
+            keep2 = ibm.mask_outer(active_m)
+            Lt1 = Lt1 * keep2 + jnp.diag(1.0 - active_m)
+            # activation: decoupled coordinates swap identity -> ratio
+            Lt1 = Lt1 + jnp.diag(newbits * (jnp.sqrt(ratio) - 1.0))
+            M1b = M1 + jnp.diag(newbits / ratio)
+            H1b = H1 * (1.0 - newbits)[:, None]
+            return Lt1, M1b, H1b
+
+        Lt1, M1b, H1b = jax.lax.cond(
+            has_drop | jnp.any(newbits > 0.5), diag_swaps, lambda ops: ops,
+            (Lt1, M1, H1),
+        )
+        w2 = M1b @ z
+        Lt2 = ibm.chol_rank1_update_t(Lt1, Lt1 @ w2)
+        d2 = 1.0 + jnp.dot(z, w2)
+        w2r = w2 / jnp.sqrt(d2)
+        M2 = M1b - jnp.outer(w2r, w2r)
+        H2 = H1b + jnp.outer(w2 / d2, x_n - z @ H1b)
+        return Lt2, M2, H2
+
+    Lt_n, M_n, H_n = jax.lax.cond(
+        changed, apply_moves, lambda _: (Lt, M, H), None
+    )
+    Z = Z.at[n].set(z)
+    return _FastCarry(
+        Z=Z, active=active_new, ZtZ=ZtZ_n, ZtX=ZtX_n, m=m_new,
+        Lt=Lt_n, M=M_n, H=H_n, since=since, n_refresh=n_refresh, key=key,
+    ), None
+
+
+def collapsed_row_scan(
+    Z: Array,
+    active: Array,
+    ZtZ: Array,
+    ZtX: Array,
+    m: Array,
+    X: Array,
+    key: Array,
+    alpha: Array,
+    sx: Array,
+    sa: Array,
+    *,
+    N: float,
+    birth: str = "gibbs",
+    backend: str = "ref",
+    refresh_every: int = DEFAULT_REFRESH,
+    drift_tol: float = DEFAULT_DRIFT_TOL,
+) -> tuple[Array, Array, Array, Array, Array, Array]:
+    """Scan the collapsed row step over every row of ``X``.
+
+    The shared entry point of the serial baseline (``collapsed_sweep``)
+    and the hybrid tail (``hybrid._tail_sub_iteration``). Returns
+    (Z, active, ZtZ, ZtX, m, n_refresh); ``n_refresh`` counts exact
+    refactorizations (cadence + monitor) and is 0 on the ref backend.
+    """
+    if backend not in COLLAPSED_BACKENDS:
+        raise ValueError(f"backend={backend!r} not in {COLLAPSED_BACKENDS}")
+    n_rows, D = X.shape
+    rows = jnp.arange(n_rows)
+    if backend == "ref":
+        body = partial(_row_step, X=X, N=N, D=D, birth=birth)
+        carry = (Z, active, ZtZ, ZtX, m, alpha, sx, sa, key)
+        carry, _ = jax.lax.scan(body, carry, rows)
+        Z, active, ZtZ, ZtX, m = carry[:5]
+        return Z, active, ZtZ, ZtX, m, jnp.zeros((), jnp.int32)
+    ratio = (sx / sa) ** 2
+    Lt, M, H = _exact_factor(ZtZ, ZtX, active, ratio)
+    body = partial(
+        _row_step_fast, X=X, N=N, D=D, birth=birth,
+        alpha=alpha, sx=sx, sa=sa,
+        refresh_every=refresh_every, drift_tol=drift_tol,
+        flip_flavor="pallas" if backend == "pallas" else "packed",
+    )
+    carry = _FastCarry(
+        Z=Z, active=active, ZtZ=ZtZ, ZtX=ZtX, m=m, Lt=Lt, M=M, H=H,
+        since=jnp.zeros((), jnp.int32), n_refresh=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+    carry, _ = jax.lax.scan(body, carry, rows)
+    return carry.Z, carry.active, carry.ZtZ, carry.ZtX, carry.m, carry.n_refresh
+
+
+@partial(jax.jit, static_argnames=("hyp", "backend", "refresh_every"))
+def collapsed_sweep(
+    state: IBPState,
+    X: Array,
+    hyp: IBPHypers,
+    backend: str = "ref",
+    refresh_every: int = DEFAULT_REFRESH,
+) -> IBPState:
     """One full collapsed Gibbs sweep over all rows + hyperparameter updates."""
     N, D = X.shape
     Z, active = state.Z, state.active
@@ -162,10 +461,13 @@ def collapsed_sweep(state: IBPState, X: Array, hyp: IBPHypers) -> IBPState:
     ZtX = (Z.T @ X) * active[:, None]
     key, ksweep, kalpha, ksx, ksa = jax.random.split(state.key, 5)
 
-    body = partial(_row_step, X=X, N=float(N), D=D, birth="gibbs")
-    carry = (Z, active, ZtZ, ZtX, m, state.alpha, state.sigma_x, state.sigma_a, ksweep)
-    carry, _ = jax.lax.scan(body, carry, jnp.arange(N))
-    Z, active, ZtZ, ZtX, m, alpha, sx, sa, _ = carry
+    Z, active, ZtZ, ZtX, m, _ = collapsed_row_scan(
+        Z, active, ZtZ, ZtX, m, X, ksweep,
+        state.alpha, state.sigma_x, state.sigma_a,
+        N=float(N), birth="gibbs", backend=backend,
+        refresh_every=refresh_every,
+    )
+    alpha, sx, sa = state.alpha, state.sigma_x, state.sigma_a
 
     # prune columns that died during the sweep
     active = active * (m > 0.5)

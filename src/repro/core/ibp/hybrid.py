@@ -56,7 +56,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 
 from . import math as ibm
-from .collapsed import _row_step
+from .collapsed import DEFAULT_REFRESH, collapsed_row_scan
 from .sweeps import uncollapsed_sweep
 
 Array = jax.Array
@@ -158,22 +158,28 @@ def _tail_sub_iteration(
     gs: HybridGlobal,
     N_global: float,
     key: Array,
+    collapsed_backend: str = "ref",
+    chol_refresh: int = DEFAULT_REFRESH,
 ) -> tuple[Array, Array]:
-    """Collapsed Gibbs + MH births on the tail (runs on p' only)."""
-    D = X_p.shape[1]
+    """Collapsed Gibbs + MH births on the tail (runs on p' only).
+
+    ``collapsed_backend`` selects the row-step implementation (DESIGN.md
+    §12): the K_tail ≤ 8 problem is too small for the O(K²) carry to
+    matter, but the "pallas" flavor moves the K-sequential bit-flip
+    recurrence into the ``collapsed_row`` kernel, keeping the whole tail
+    recurrence VMEM-resident on TPU.
+    """
     # residual given instantiated features = the tail model's data
     R = X_p - (Z * gs.active[None, :]) @ gs.A
     m_t = jnp.sum(Z_tail, axis=0)
     ZtZ_t = Z_tail.T @ Z_tail
     ZtR = Z_tail.T @ R
-    body = partial(_row_step, X=R, N=N_global, D=D, birth="mh")
-    carry = (
-        Z_tail, tail_active, ZtZ_t, ZtR, m_t,
-        gs.alpha, gs.sigma_x, gs.sigma_a, key,
+    Z_tail, tail_active, _, _, m_t, _ = collapsed_row_scan(
+        Z_tail, tail_active, ZtZ_t, ZtR, m_t, R, key,
+        gs.alpha, gs.sigma_x, gs.sigma_a,
+        N=N_global, birth="mh", backend=collapsed_backend,
+        refresh_every=chol_refresh,
     )
-    carry, _ = jax.lax.scan(body, carry, jnp.arange(X_p.shape[0]))
-    Z_tail, tail_active = carry[0], carry[1]
-    m_t = carry[4]
     # prune dead tail columns
     tail_active = tail_active * (m_t > 0.5)
     Z_tail = Z_tail * tail_active[None, :]
@@ -190,6 +196,8 @@ def shard_sub_iterations(
     N_global: float,
     L: int,
     backend: str = "jnp",
+    collapsed_backend: str = "ref",
+    chol_refresh: int = DEFAULT_REFRESH,
 ) -> tuple[Array, Array, Array]:
     """L sub-iterations of the paper's inner loop on one shard."""
     key_shard = jax.random.fold_in(gs.key, shard_idx)
@@ -206,7 +214,9 @@ def shard_sub_iterations(
         def with_tail(args):
             Z_tail, tail_active = args
             return _tail_sub_iteration(
-                X_p, Z, Z_tail, tail_active, gs, N_global, kt
+                X_p, Z, Z_tail, tail_active, gs, N_global, kt,
+                collapsed_backend=collapsed_backend,
+                chol_refresh=chol_refresh,
             )
 
         Z_tail, tail_active = jax.lax.cond(
@@ -238,7 +248,6 @@ def promote_tail(
     rank = jnp.cumsum(tail_active_g) * tail_active_g        # 1-indexed among tails
     kept = tail_active_g * (rank <= n_free)
     n_drop = jnp.sum(tail_active_g) - jnp.sum(kept)
-    free_rank = jnp.cumsum(free) * free                     # 1-indexed among frees
     # target slot of tail j = index of the rank_j-th free slot
     # searchsorted over cumsum(free) gives that index
     cums = jnp.cumsum(free)
@@ -335,6 +344,8 @@ def _hybrid_iteration_body(
     L: int,
     N_g: float,
     backend: str,
+    collapsed_backend: str = "ref",
+    chol_refresh: int = DEFAULT_REFRESH,
 ) -> tuple[HybridGlobal, HybridShard]:
     """One full hybrid iteration for ONE chain (vmap-simulated shards).
 
@@ -345,7 +356,8 @@ def _hybrid_iteration_body(
     P_, N_p, D = X_shards.shape
 
     sub = partial(
-        shard_sub_iterations, N_global=N_g, L=L, backend=backend
+        shard_sub_iterations, N_global=N_g, L=L, backend=backend,
+        collapsed_backend=collapsed_backend, chol_refresh=chol_refresh,
     )
     Z, Z_tail, tail_active = jax.vmap(
         sub, in_axes=(0, 0, 0, 0, None, 0)
@@ -386,7 +398,8 @@ def _hybrid_iteration_body(
     return gs_new, ss_new
 
 
-@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend"))
+@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend",
+                                   "collapsed_backend", "chol_refresh"))
 def hybrid_iteration_vmap(
     X_shards: Array,            # (P, N_p, D)
     gs: HybridGlobal,
@@ -395,10 +408,13 @@ def hybrid_iteration_vmap(
     L: int = 5,
     N_global: int = 0,
     backend: str = "jnp",
+    collapsed_backend: str = "ref",
+    chol_refresh: int = DEFAULT_REFRESH,
 ) -> tuple[HybridGlobal, HybridShard]:
     P_, N_p, D = X_shards.shape
     N_g = float(N_global if N_global else P_ * N_p)
-    return _hybrid_iteration_body(X_shards, gs, ss, hyp, L, N_g, backend)
+    return _hybrid_iteration_body(X_shards, gs, ss, hyp, L, N_g, backend,
+                                  collapsed_backend, chol_refresh)
 
 
 # --------------------------------------------------------------------------
@@ -423,7 +439,8 @@ def init_multichain(
     return jax.vmap(lambda k: init_hybrid(k, X_shards, K_max, **kw))(keys)
 
 
-@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend"))
+@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend",
+                                   "collapsed_backend", "chol_refresh"))
 def hybrid_iteration_multichain(
     X_shards: Array,            # (P, N_p, D) — shared, NOT chain-batched
     gs: HybridGlobal,           # leaves lead with chain axis C
@@ -432,17 +449,21 @@ def hybrid_iteration_multichain(
     L: int = 5,
     N_global: int = 0,
     backend: str = "jnp",
+    collapsed_backend: str = "ref",
+    chol_refresh: int = DEFAULT_REFRESH,
 ) -> tuple[HybridGlobal, HybridShard]:
     """Advance C independent chains one full hybrid iteration, one jit."""
     P_, N_p, D = X_shards.shape
     N_g = float(N_global if N_global else P_ * N_p)
     return jax.vmap(
         lambda g, s: _hybrid_iteration_body(X_shards, g, s, hyp, L, N_g,
-                                            backend)
+                                            backend, collapsed_backend,
+                                            chol_refresh)
     )(gs, ss)
 
 
-@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend"))
+@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend",
+                                   "collapsed_backend", "chol_refresh"))
 def hybrid_stale_pass(
     X_shards: Array,
     gs: HybridGlobal,
@@ -451,6 +472,8 @@ def hybrid_stale_pass(
     L: int = 1,
     N_global: int = 0,
     backend: str = "jnp",
+    collapsed_backend: str = "ref",
+    chol_refresh: int = DEFAULT_REFRESH,
 ) -> tuple[HybridGlobal, HybridShard]:
     """Bounded-staleness pass: shard sub-iterations WITHOUT the master sync.
 
@@ -467,7 +490,9 @@ def hybrid_stale_pass(
     P_, N_p, D = X_shards.shape
     N_g = float(N_global if N_global else P_ * N_p)
     gs_sweep = dataclasses.replace(gs, key=jax.random.fold_in(gs.key, 13))
-    sub = partial(shard_sub_iterations, N_global=N_g, L=L, backend=backend)
+    sub = partial(shard_sub_iterations, N_global=N_g, L=L, backend=backend,
+                  collapsed_backend=collapsed_backend,
+                  chol_refresh=chol_refresh)
     Z, Z_tail, tail_active = jax.vmap(
         sub, in_axes=(0, 0, 0, 0, None, 0)
     )(X_shards, ss.Z, ss.Z_tail, ss.tail_active, gs_sweep, jnp.arange(P_))
@@ -481,6 +506,8 @@ def make_hybrid_stale_pass_shardmap(
     L: int = 1,
     N_global: int = 0,
     backend: str = "jnp",
+    collapsed_backend: str = "ref",
+    chol_refresh: int = DEFAULT_REFRESH,
 ):
     """shard_map counterpart of ``hybrid_stale_pass``: sub-iterations with
     NO collectives at all — the whole point of bounded staleness on a real
@@ -499,7 +526,8 @@ def make_hybrid_stale_pass_shardmap(
                 gs, key=jax.random.fold_in(gs.key, 13)
             )
             Z_p, Zt_p, ta = shard_sub_iterations(
-                X_p, Z_p, Zt_p, ta, gs_sweep, idx, N_g, L, backend
+                X_p, Z_p, Zt_p, ta, gs_sweep, idx, N_g, L, backend,
+                collapsed_backend, chol_refresh
             )
             gs_out = dataclasses.replace(
                 gs, key=jax.random.fold_in(gs.key, 14)
@@ -532,6 +560,8 @@ def make_hybrid_iteration_shardmap(
     N_global: int = 0,
     backend: str = "jnp",
     sync: str = "staged",
+    collapsed_backend: str = "ref",
+    chol_refresh: int = DEFAULT_REFRESH,
 ):
     """Build a jitted hybrid iteration sharded over ``data_axes`` of ``mesh``.
 
@@ -582,7 +612,8 @@ def make_hybrid_iteration_shardmap(
             ta = ta_p[0]  # (1, K_tail) local block -> (K_tail,)
             idx = compat.axis_index(data_axes)
             Z_p, Zt_p2, ta = shard_sub_iterations(
-                X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, backend
+                X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, backend,
+                collapsed_backend, chol_refresh
             )
             tail_g = jax.lax.psum(ta, data_axes)                    # AR 1
             Z_p, active_new, n_drop = promote_tail(Z_p, Zt_p2, tail_g, gs.active)
@@ -600,7 +631,8 @@ def make_hybrid_iteration_shardmap(
             ta = ta_p[0]
             idx = compat.axis_index(data_axes)
             Z_p, Zt_p2, ta = shard_sub_iterations(
-                X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, backend
+                X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, backend,
+                collapsed_backend, chol_refresh
             )
             K_max = Z_p.shape[1]
             K_tail = ta.shape[0]

@@ -47,6 +47,15 @@ def chol_inv_logdet(W: Array) -> tuple[Array, Array]:
     return Winv, logdet
 
 
+def chol_inv(W: Array) -> tuple[Array, Array]:
+    """Return (L, W^{-1}) via Cholesky — the exact-refactorization form the
+    fast collapsed row step refreshes its carried (L, M) from."""
+    L = jnp.linalg.cholesky(W)
+    eye = jnp.eye(W.shape[0], dtype=W.dtype)
+    Linv = jax.scipy.linalg.solve_triangular(L, eye, lower=True)
+    return L, Linv.T @ Linv
+
+
 def collapsed_loglik(
     trXtX: Array,
     ZtX: Array,
@@ -96,6 +105,99 @@ def sm_update(M: Array, z: Array) -> tuple[Array, Array]:
     Mz = M @ z
     denom = 1.0 + jnp.dot(z, Mz)
     return M - jnp.outer(Mz, Mz) / denom, jnp.log(denom)
+
+
+def _chol_rank1_t(Lt: Array, p: Array, sigma: float, eps: float) -> tuple[Array, Array]:
+    """Core of the rank-one Cholesky up/downdate, transposed layout.
+
+    Closed "semiseparable" form (Gill, Golub, Murray & Saunders Method C /
+    Seeger 2004): with p = L^{-1} x,
+
+        chol(L L^T + sigma x x^T) = L * chol(I + sigma p p^T)
+
+    and chol(I + sigma p p^T) has entries T[j,j] = sqrt(d_j / d_{j-1}),
+    T[i>j, j] = sigma p_i p_j / sqrt(d_j d_{j-1}) with d_j = 1 + sigma
+    cumsum(p^2)_j — so the whole move is a cumulative sum + elementwise
+    work: O(K^2) in dense vectorized ops with no sequential K-loop (the
+    LINPACK column-rotation form is also O(K^2) but serializes K dependent
+    steps, which is what dominates wall-time on CPU/TPU at our K).
+
+    Works on Lt = L^T (upper triangular, row-major) so every pass —
+    the cumulative sum over source columns in particular — runs along
+    contiguous rows: (L T)^T[j] = r_j Lt[j] + sigma-coef_j * sum_{i>j}
+    p_i Lt[i], and the exclusive tail sum is (p @ Lt) - inclusive-cumsum.
+
+    Returns (Lt', ok): ``ok`` is False when some d_j fell below ``eps``,
+    i.e. the downdated matrix lost positive definiteness.
+
+    Padding contract: a padded/inactive slot j has Lt[j, j] = 1 with zero
+    off-diagonals AND p_j = 0 (callers mask the rank-one vector by the
+    active mask); then the slot's row scales by exactly 1 and receives
+    exactly 0 — padding-transparent, no masked variant needed.
+    """
+    K = Lt.shape[0]
+    p2 = p * p
+    d = 1.0 + sigma * jnp.cumsum(p2)
+    d_prev = d - sigma * p2  # d_{j-1} with d_{-1} = 1
+    ok = jnp.all(d > eps) & jnp.all(d_prev > eps)
+    d = jnp.maximum(d, eps)
+    d_prev = jnp.maximum(d_prev, eps)
+    r = jnp.sqrt(d / d_prev)               # diagonal of chol(I + sigma p p^T)
+    qc = sigma * p / jnp.sqrt(d * d_prev)  # tail coefficient per column
+    Gt = Lt * p[:, None]
+    # Ct[j] = sum_{i > j} p_i Lt[i] — exclusive tail sums over rows. The
+    # prefix sums go through a GEMM against a constant lower-triangular
+    # ones matrix rather than jnp.cumsum: on CPU/TPU the K^3 matmul beats
+    # the K^2 scan-lowered cumsum by ~2x at our K (BLAS/MXU vs serial scan)
+    tril = jnp.tril(jnp.ones((K, K), Lt.dtype))
+    acc = tril @ Gt
+    Ct = acc[-1][None, :] - acc
+    return Lt * r[:, None] + Ct * qc[:, None], ok
+
+
+def chol_rank1_update_t(Lt: Array, p: Array) -> Array:
+    """Transposed-layout rank-one update with precomputed p = L^{-1} x.
+
+    The hot-path form: the fast collapsed row step already carries
+    M = W^{-1}, so p = L^T (M x) is a matvec — no triangular solve. The
+    update direction cannot lose positive definiteness: no canary.
+    """
+    Lp, _ = _chol_rank1_t(Lt, p, 1.0, 1e-12)
+    return Lp
+
+
+def chol_rank1_downdate_t(Lt: Array, p: Array, eps: float = 1e-12) -> tuple[Array, Array]:
+    """Transposed-layout rank-one downdate with precomputed p = L^{-1} x.
+
+    Returns (Lt', ok); ``ok`` False = positive definiteness lost (see
+    ``chol_rank1_downdate``).
+    """
+    return _chol_rank1_t(Lt, p, -1.0, eps)
+
+
+def chol_rank1_update(L: Array, x: Array) -> Array:
+    """Rank-one Cholesky update: chol(L L^T + x x^T) in O(K^2) vector ops.
+
+    Standalone (lower-triangular) form: does its own triangular solve for
+    p. See ``_chol_rank1_t`` for the algebra + padding contract.
+    """
+    p = jax.scipy.linalg.solve_triangular(L, x, lower=True)
+    return chol_rank1_update_t(L.T, p).T
+
+
+def chol_rank1_downdate(L: Array, x: Array, eps: float = 1e-12) -> tuple[Array, Array]:
+    """Rank-one Cholesky downdate: chol(L L^T - x x^T), with a canary.
+
+    Returns (L', ok). ``ok`` is False when some partial d_j = 1 -
+    cumsum(p^2)_j fell below ``eps`` — i.e. the implied matrix lost
+    positive definiteness. Mathematically this never happens for our
+    W - z z^T (removing a row keeps W ⪰ (sigma_x/sigma_a)^2 I), so a False
+    here is a float-drift detector: the caller must refresh from the exact
+    sufficient statistics. See ``_chol_rank1_t`` for algebra + padding.
+    """
+    p = jax.scipy.linalg.solve_triangular(L, x, lower=True)
+    Lt, ok = chol_rank1_downdate_t(L.T, p, eps)
+    return Lt.T, ok
 
 
 def a_posterior(

@@ -1,0 +1,27 @@
+"""Shared backend detection for the Pallas kernel packages.
+
+Every kernel wrapper needs the same decision: compile the Pallas body on
+TPU, fall back to ``interpret=True`` elsewhere (this container is
+CPU-only, so interpret mode is the validation path). The decision is a
+property of the process' platform, not of any traced value, so it is
+made ONCE and cached — each jitted wrapper then bakes it in as a static
+argument at trace time instead of re-querying ``jax.default_backend()``
+on every call (which each kernel package used to re-implement as its
+own ``_on_tpu()``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.cache
+def on_tpu() -> bool:
+    """True when the default JAX backend is TPU (cached per process)."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Static ``interpret=`` default for pallas_call wrappers."""
+    return not on_tpu()

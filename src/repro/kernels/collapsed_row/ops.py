@@ -1,0 +1,46 @@
+"""Dispatching wrapper for the collapsed_row bit-flip recurrence.
+
+``collapsed_row_flip(..., flavor=...)`` selects the implementation:
+
+* ``"jnp"``    — the pure-jnp oracle (full-K lax.scan, bitwise the seed
+  sampler's inner loop). The ``backend="ref"`` sampler uses this.
+* ``"packed"`` — the CPU-fast form: O(K) per bit (rss/rH carry) over the
+  packed active columns only (dynamic-bound while_loop). The
+  ``backend="fast"`` sampler uses this.
+* ``"pallas"`` — the Pallas kernel, full-K mean-form like "jnp" (compiled
+  on TPU; ``interpret=True`` elsewhere, decided once via
+  ``kernels/_backend.py``). Selected by the sampler's ``backend="pallas"``.
+
+No jit here: the caller (``core/ibp/collapsed.py``) traces this inside an
+already-jitted row scan, and ``flavor`` is static by construction.
+"""
+from __future__ import annotations
+
+from repro.kernels._backend import default_interpret
+
+from .fast import collapsed_row_flip_fast
+from .kernel import collapsed_row_flip_pallas
+from .ref import collapsed_row_flip_ref
+
+FLAVORS = ("jnp", "packed", "pallas")
+
+
+def collapsed_row_flip(
+    M, H, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2,
+    *, flavor: str = "jnp",
+):
+    """Run the K-sequential bit-flip recurrence; returns (z, v, q, mean)."""
+    if flavor not in FLAVORS:
+        raise ValueError(f"flavor={flavor!r} not in {FLAVORS}")
+    if flavor == "pallas":
+        return collapsed_row_flip_pallas(
+            M, H, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2,
+            interpret=default_interpret(),
+        )
+    if flavor == "packed":
+        return collapsed_row_flip_fast(
+            M, H, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2
+        )
+    return collapsed_row_flip_ref(
+        M, H, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2
+    )

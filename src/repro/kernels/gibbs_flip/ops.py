@@ -12,6 +12,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._backend import default_interpret
+
 from .kernel import DEFAULT_BLOCK_N, gibbs_flip_pallas
 
 Array = jax.Array
@@ -20,10 +22,6 @@ Array = jax.Array
 def _logit(p: Array) -> Array:
     p = jnp.clip(p, 1e-6, 1.0 - 1e-6)
     return jnp.log(p) - jnp.log1p(-p)
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -71,5 +69,5 @@ def gibbs_flip(
     inv2s2 = 0.5 / (sigma_x.astype(jnp.float32) ** 2)
     return gibbs_flip_core(
         X, Z, A, _logit(pi), active, u, inv2s2,
-        block_n=block_n, interpret=not _on_tpu(),
+        block_n=block_n, interpret=default_interpret(),
     )

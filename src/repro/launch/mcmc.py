@@ -12,6 +12,7 @@ import json
 import os
 
 from repro.core.ibp import IBPHypers
+from repro.core.ibp.collapsed import DEFAULT_REFRESH
 from repro.data import cambridge_data, train_eval_split
 from repro.runtime import DriverConfig, MCMCDriver
 
@@ -36,6 +37,14 @@ def main(argv=None):
                     help="master-sync schedule for --driver shardmap")
     ap.add_argument("--stale-sync", type=int, default=0,
                     help="bounded-staleness passes per iteration (non-exact)")
+    ap.add_argument("--collapsed-backend", default="ref",
+                    choices=["ref", "fast", "pallas"],
+                    help="tail collapsed row step: fresh O(K^3) factorization "
+                         "per row (ref), rank-one Cholesky carry (fast), or "
+                         "fast + Pallas bit-flip kernel (pallas)")
+    ap.add_argument("--chol-refresh", type=int, default=DEFAULT_REFRESH,
+                    help="exact-refactorization cadence of the fast/pallas "
+                         "collapsed backend (rows between refreshes)")
     ap.add_argument("--out", default="artifacts/mcmc_history.json")
     args = ap.parse_args(argv)
 
@@ -52,6 +61,8 @@ def main(argv=None):
         n_chains=(args.chains if args.chains is not None
                   else (4 if args.driver == "multichain" else 1)),
         sync=args.sync, stale_sync=args.stale_sync,
+        collapsed_backend=args.collapsed_backend,
+        chol_refresh=args.chol_refresh,
     )
     drv = MCMCDriver(X_train, cfg, IBPHypers(), X_eval=X_eval)
 

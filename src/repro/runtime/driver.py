@@ -42,6 +42,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import restore, save_pytree
+from repro.core.ibp.collapsed import (
+    COLLAPSED_BACKENDS,
+    DEFAULT_REFRESH as DEFAULT_CHOL_REFRESH,
+)
 from repro.core.ibp import (
     IBPHypers,
     hybrid_iteration_multichain,
@@ -80,6 +84,8 @@ class DriverConfig:
     n_chains: int = 1          # chain count for driver="multichain"
     sync: str = "staged"       # "staged" | "fused" master sync (shardmap only)
     overflow_every: int = 8    # overflow-detection cadence (host sync each check)
+    collapsed_backend: str = "ref"  # "ref" | "fast" | "pallas" tail row step
+    chol_refresh: int = DEFAULT_CHOL_REFRESH  # "fast"/"pallas" refactor cadence
 
 
 def _pad_trailing(x: jax.Array, axis: int, n: int) -> jax.Array:
@@ -109,6 +115,13 @@ class MCMCDriver:
                 f"sync={cfg.sync!r} has no effect with "
                 f"driver={cfg.driver!r}; use driver='shardmap'"
             )
+        if cfg.collapsed_backend not in COLLAPSED_BACKENDS:
+            raise ValueError(
+                f"collapsed_backend={cfg.collapsed_backend!r} not in "
+                f"{COLLAPSED_BACKENDS}"
+            )
+        if cfg.chol_refresh < 1:
+            raise ValueError(f"chol_refresh={cfg.chol_refresh} must be >= 1")
         self.cfg = cfg
         self.hyp = hyp or IBPHypers()
         N = (X.shape[0] // cfg.P) * cfg.P
@@ -142,7 +155,9 @@ class MCMCDriver:
             it_fn = (hybrid_iteration_multichain if self._chain_axis
                      else hybrid_iteration_vmap)
             one = lambda fn, g, s: fn(self.Xs, g, s, self.hyp, L=cfg.L,
-                                      N_global=self.N, backend=cfg.backend)
+                                      N_global=self.N, backend=cfg.backend,
+                                      collapsed_backend=cfg.collapsed_backend,
+                                      chol_refresh=cfg.chol_refresh)
             self._step = lambda gs, ss: one(it_fn, gs, ss)
             if self._chain_axis:
                 # built ONCE as jit(vmap(...)) — a bare vmap-of-jit would
@@ -171,11 +186,15 @@ class MCMCDriver:
         raw = make_hybrid_iteration_shardmap(
             mesh, ("data",), self.hyp, L=cfg.L, N_global=self.N,
             backend=cfg.backend, sync=cfg.sync,
+            collapsed_backend=cfg.collapsed_backend,
+            chol_refresh=cfg.chol_refresh,
         )
         raw_stale = (
             make_hybrid_stale_pass_shardmap(
                 mesh, ("data",), L=cfg.L, N_global=self.N,
                 backend=cfg.backend,
+                collapsed_backend=cfg.collapsed_backend,
+                chol_refresh=cfg.chol_refresh,
             ) if cfg.stale_sync > 0 else None
         )
         sh = NamedSharding(mesh, PS("data"))

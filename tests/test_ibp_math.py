@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp_compat import given_or_params
 
 from repro.core.ibp import math as ibm
 
@@ -75,6 +76,77 @@ def test_sherman_morrison_updates():
 
     M2, ld2 = ibm.sm_downdate(jnp.asarray(want, jnp.float32), jnp.asarray(z, jnp.float32))
     np.testing.assert_allclose(np.asarray(M2), M, rtol=1e-3, atol=1e-4)
+
+
+def _padded_chol_case(n, k_max, k_act, seed):
+    """Random SPD W padded to k_max with an active mask + a masked binary x."""
+    rng = np.random.default_rng(seed)
+    act = np.zeros(k_max, np.float32)
+    act[np.sort(rng.choice(k_max, size=k_act, replace=False))] = 1.0
+    Zcols = (rng.random((n, k_max)) < 0.5).astype(np.float64) * act
+    W = Zcols.T @ Zcols + 0.7 * np.diag(act) + np.diag(1.0 - act)
+    x = (rng.random(k_max) < 0.5).astype(np.float64) * act
+    return W, x, act
+
+
+@given_or_params(max_examples=25, n=(8, 60), k_max=(2, 24), seed=(0, 10_000))
+def test_chol_rank1_update_matches_fresh_factorization(n, k_max, seed):
+    rng = np.random.default_rng(seed)
+    k_act = int(rng.integers(1, k_max + 1))
+    W, x, act = _padded_chol_case(n, k_max, k_act, seed)
+    L = np.linalg.cholesky(W)
+    got = ibm.chol_rank1_update(jnp.asarray(L, jnp.float32),
+                                jnp.asarray(x, jnp.float32))
+    want = np.linalg.cholesky(W + np.outer(x, x))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+    # padding transparency: inactive rows/cols stay exactly identity
+    inact = act < 0.5
+    got = np.asarray(got)
+    assert np.all(got[inact][:, ~inact] == 0)
+    assert np.all(got[np.ix_(inact, inact)] == np.eye(int(inact.sum())))
+
+
+@given_or_params(max_examples=25, n=(8, 60), k_max=(2, 24), seed=(0, 10_000))
+def test_chol_rank1_downdate_matches_fresh_factorization(n, k_max, seed):
+    rng = np.random.default_rng(seed)
+    k_act = int(rng.integers(1, k_max + 1))
+    W, x, act = _padded_chol_case(n, k_max, k_act, seed)
+    Wup = W + np.outer(x, x)
+    L = np.linalg.cholesky(Wup)
+    got, ok = ibm.chol_rank1_downdate(jnp.asarray(L, jnp.float32),
+                                      jnp.asarray(x, jnp.float32))
+    assert bool(ok), "downdate of an SPD-remaining matrix must not trip"
+    want = np.linalg.cholesky(W)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_chol_rank1_roundtrip_and_t_variants():
+    """update then downdate returns the original factor; the transposed
+    precomputed-p forms agree with the solve-based public forms."""
+    rng = np.random.default_rng(0)
+    K = 12
+    Z = (rng.random((50, K)) < 0.4).astype(np.float64)
+    W = Z.T @ Z + 0.7 * np.eye(K)
+    L = np.linalg.cholesky(W).astype(np.float32)
+    x = (rng.random(K) < 0.5).astype(np.float32)
+    L1 = ibm.chol_rank1_update(jnp.asarray(L), jnp.asarray(x))
+    L2, ok = ibm.chol_rank1_downdate(L1, jnp.asarray(x))
+    assert bool(ok)
+    np.testing.assert_allclose(np.asarray(L2), L, rtol=1e-3, atol=1e-4)
+    # _t forms with p = L^{-1} x
+    import scipy.linalg as sla
+    p = sla.solve_triangular(L, x, lower=True).astype(np.float32)
+    Lt1 = ibm.chol_rank1_update_t(jnp.asarray(L.T.copy()), jnp.asarray(p))
+    np.testing.assert_allclose(np.asarray(Lt1).T, np.asarray(L1),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_chol_rank1_downdate_canary_fires_on_pd_loss():
+    """Downdating more mass than the matrix holds must flag ok=False."""
+    K = 6
+    L = jnp.asarray(np.linalg.cholesky(0.1 * np.eye(K)), jnp.float32)
+    _, ok = ibm.chol_rank1_downdate(L, jnp.ones((K,), jnp.float32))
+    assert not bool(ok)
 
 
 def test_a_posterior_matches_conjugate_formula():
