@@ -19,18 +19,13 @@ Three measurements (ISSUE 2 / DESIGN.md §12):
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import subprocess
-import sys
-import textwrap
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+from benchmarks._hostdev import run_hostdev_json
 
 
 def _sweep_time(backend: str, X, K_max: int, refresh: int, iters: int,
@@ -121,54 +116,30 @@ def bench_uncollapsed(N: int, D: int, K: int, iters: int,
 def bench_hybrid_sync(N: int, P: int, iters: int, K_max: int = 32,
                       L: int = 2) -> dict | None:
     """staged vs fused master sync, P forced host devices (subprocess)."""
-    code = textwrap.dedent(f"""
-        import json, time, jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding
-        from repro.data import cambridge_data, shard_rows
-        from repro.core.ibp import IBPHypers, init_hybrid, \\
-            make_hybrid_iteration_shardmap
-        from repro.compat import make_mesh
+    code = f"""
+        import json, time, jax
+        from repro.data import cambridge_data
+        from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
         X, _, _ = cambridge_data(N={N}, seed=0)
-        Pn = {P}
-        Xs = jnp.asarray(shard_rows(X, Pn))
-        mesh = make_mesh((Pn,), ("data",))
         out = {{}}
         for sync in ("staged", "fused"):
-            gs, ss = init_hybrid(jax.random.key(0), Xs, {K_max}, K_tail=8,
-                                 K_init=4)
-            step = make_hybrid_iteration_shardmap(
-                mesh, ("data",), IBPHypers(), L={L}, N_global={N}, sync=sync)
-            sh = NamedSharding(mesh, P("data"))
-            Xf = jax.device_put(Xs.reshape({N}, -1), sh)
-            Zf = jax.device_put(ss.Z.reshape({N}, -1), sh)
-            Zt = jax.device_put(ss.Z_tail.reshape({N}, -1), sh)
-            ta = jax.device_put(ss.tail_active, sh)
-            gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)
-            jax.block_until_ready(Zf)
+            spec = SamplerSpec(P={P}, K_max={K_max}, K_tail=8, K_init=4,
+                               L={L}, data="shardmap", sync=sync)
+            s = build_sampler(spec, IBPHypers(), X)
+            gs, st = s.init(jax.random.key(0))
+            gs, st = s.step(gs, st)
+            jax.block_until_ready(st[0])
             t0 = time.time()
             for _ in range({iters}):
-                gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)
-            jax.block_until_ready(Zf)
+                gs, st = s.step(gs, st)
+            jax.block_until_ready(st[0])
             out[sync + "_s"] = (time.time() - t0) / {iters}
         print("BENCH_JSON:" + json.dumps(out))
-    """)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + f" --xla_force_host_platform_device_count={P}")
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env["JAX_PLATFORMS"] = "cpu"
-    try:
-        res = subprocess.run([sys.executable, "-c", code], env=env,
-                             capture_output=True, text=True, timeout=900)
-        for line in res.stdout.splitlines():
-            if line.startswith("BENCH_JSON:"):
-                d = json.loads(line[len("BENCH_JSON:"):])
-                d.update({"P": P, "N": N, "K_max": K_max, "L": L})
-                return d
-        print(res.stdout[-2000:], res.stderr[-2000:], file=sys.stderr)
-    except subprocess.TimeoutExpired:
-        print("hybrid_sync subprocess timed out", file=sys.stderr)
-    return None
+    """
+    d = run_hostdev_json(code, P)
+    if d is not None:
+        d.update({"P": P, "N": N, "K_max": K_max, "L": L})
+    return d
 
 
 def main(argv=None) -> tuple[list[str], dict]:

@@ -28,13 +28,13 @@ import numpy as np
 
 from repro.core.ibp import (
     IBPHypers,
+    SamplerSpec,
+    build_sampler,
     collapsed_sweep,
-    hybrid_iteration_vmap,
-    init_hybrid,
     init_state,
 )
 from repro.core.ibp.diagnostics import heldout_joint_loglik
-from repro.data import cambridge_data, shard_rows, train_eval_split
+from repro.data import cambridge_data, train_eval_split
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 
@@ -74,16 +74,17 @@ def run_collapsed(X_train, X_eval, iters, K_max, seed, eval_every):
 
 
 def run_hybrid(X_train, X_eval, P, iters, L, K_max, seed, eval_every):
-    Xs = jnp.asarray(shard_rows(X_train, P))
-    N = Xs.shape[0] * Xs.shape[1]
-    hyp = IBPHypers()
-    gs, ss = init_hybrid(jax.random.key(seed), Xs, K_max, K_tail=8, K_init=4)
-    g, s = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=L, N_global=N)
+    smp = build_sampler(
+        SamplerSpec(P=P, K_max=K_max, K_tail=8, K_init=4, L=L, seed=seed),
+        IBPHypers(), X_train,
+    )
+    gs, ss = smp.init(jax.random.key(seed))
+    g, s = smp.step(gs, ss)
     jax.block_until_ready(s.Z)  # warm-up compile
     trace = []
     t0 = time.time()
     for it in range(iters):
-        gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=L, N_global=N)
+        gs, ss = smp.step(gs, ss)
         if (it + 1) % eval_every == 0 or it == iters - 1:
             jax.block_until_ready(ss.Z)
             t = time.time() - t0

@@ -16,14 +16,14 @@ import numpy as np
 
 from repro.core.ibp import (
     IBPHypers,
+    SamplerSpec,
+    build_sampler,
     collapsed_sweep,
-    hybrid_iteration_vmap,
-    init_hybrid,
     init_state,
 )
 from repro.core.ibp import math as ibm
 from repro.core.ibp.diagnostics import match_features
-from repro.data import cambridge_data, shard_rows
+from repro.data import cambridge_data
 from repro.data.cambridge import CAMBRIDGE_FEATURES
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
@@ -45,15 +45,17 @@ def posterior_features_collapsed(X, iters, K_max, seed):
 
 
 def posterior_features_hybrid(X, P, iters, L, K_max, seed):
-    Xs = jnp.asarray(shard_rows(X, P))
-    N = Xs.shape[0] * Xs.shape[1]
-    hyp = IBPHypers()
-    gs, ss = init_hybrid(jax.random.key(seed), Xs, K_max, K_tail=8, K_init=4)
+    smp = build_sampler(
+        SamplerSpec(P=P, K_max=K_max, K_tail=8, K_init=4, L=L, seed=seed),
+        IBPHypers(), X,
+    )
+    N = smp.N
+    gs, ss = smp.init(jax.random.key(seed))
     for _ in range(iters):
-        gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=L, N_global=N)
+        gs, ss = smp.step(gs, ss)
     Z = ss.Z.reshape(N, -1)
     ZtZ = (Z.T @ Z) * ibm.mask_outer(gs.active)
-    ZtX = (Z.T @ Xs.reshape(N, -1)) * gs.active[:, None]
+    ZtX = (Z.T @ smp.Xs.reshape(N, -1)) * gs.active[:, None]
     A, _ = ibm.a_posterior(ZtZ, ZtX, gs.active, gs.sigma_x, gs.sigma_a)
     order = jnp.argsort(-jnp.sum(Z, axis=0) * gs.active)
     return np.asarray(A[order]), int(jnp.sum(gs.active))

@@ -1,11 +1,17 @@
 """Multi-chain scaling: per-chain iteration cost vs chain count C.
 
-The multichain driver vmaps the FULL hybrid iteration over a chain axis,
-so C chains share one jitted step: the uncollapsed sweeps batch into
-larger matmuls and the (serial) collapsed tail scans run as one batched
-scan. On one device the per-chain cost should therefore fall well below
-Cx a single chain until the FLOP side saturates — that amortization
-curve is what this benchmark measures (artifacts/multichain_scaling.csv).
+Two chain layouts of the composable sampler API (DESIGN.md §13):
+
+* ``chains="vmap"`` — C chains share one jitted step on one device: the
+  uncollapsed sweeps batch into larger matmuls and the (serial) collapsed
+  tail scans run as one batched scan, so per-chain cost falls well below
+  Cx a single chain until the FLOP side saturates. That amortization
+  curve is the main measurement (artifacts/multichain_scaling.csv).
+* ``chains="mesh"`` (``--mesh``) — the same C chains as a REAL mesh axis
+  (C forced host devices, subprocess via benchmarks/_hostdev). On a
+  shared-core CPU box this measures the per-device dispatch/collective
+  overhead of the composed path, not speedup — it exists to keep the
+  mesh layout's cost visible in the perf trajectory.
 
   python benchmarks/multichain_scaling.py --N 240 --C 1 2 4 8
 """
@@ -16,33 +22,55 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.ibp import (
-    IBPHypers,
-    hybrid_iteration_multichain,
-    init_multichain,
-)
-from repro.data import cambridge_data, shard_rows
+from benchmarks._hostdev import run_hostdev_json
+from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
+from repro.data import cambridge_data
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def _spec(P: int, C: int, L: int, K_max: int, chains: str) -> SamplerSpec:
+    return SamplerSpec(P=P, K_max=K_max, K_tail=8, K_init=4, L=L,
+                       chains=chains, n_chains=C)
 
 
 def time_multichain(N: int, P: int, C: int, iters: int, L: int,
                     K_max: int) -> float:
     X, _, _ = cambridge_data(N=N, seed=0)
-    Xs = jnp.asarray(shard_rows(X, P))
-    hyp = IBPHypers()
-    gs, ss = init_multichain(jax.random.key(0), Xs, C, K_max, K_tail=8,
-                             K_init=4)
-    gs, ss = hybrid_iteration_multichain(Xs, gs, ss, hyp, L=L, N_global=N)
-    jax.block_until_ready(ss.Z)  # compile
+    s = build_sampler(_spec(P, C, L, K_max, "vmap"), IBPHypers(), X)
+    gs, st = s.init(jax.random.key(0))
+    gs, st = s.step(gs, st)
+    jax.block_until_ready(st.Z)  # compile
     t0 = time.time()
     for _ in range(iters):
-        gs, ss = hybrid_iteration_multichain(Xs, gs, ss, hyp, L=L,
-                                             N_global=N)
-    jax.block_until_ready(ss.Z)
+        gs, st = s.step(gs, st)
+    jax.block_until_ready(st.Z)
     return (time.time() - t0) / iters
+
+
+def time_mesh_chains(N: int, P: int, C: int, iters: int, L: int,
+                     K_max: int) -> float | None:
+    """chains="mesh" x data="vmap" on C forced host devices (subprocess)."""
+    code = f"""
+        import json, time, jax
+        from repro.data import cambridge_data
+        from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
+        X, _, _ = cambridge_data(N={N}, seed=0)
+        spec = SamplerSpec(P={P}, K_max={K_max}, K_tail=8, K_init=4, L={L},
+                           chains="mesh", data="vmap", n_chains={C})
+        s = build_sampler(spec, IBPHypers(), X)
+        gs, st = s.init(jax.random.key(0))
+        gs, st = s.step(gs, st)
+        jax.block_until_ready(st[0])
+        t0 = time.time()
+        for _ in range({iters}):
+            gs, st = s.step(gs, st)
+        jax.block_until_ready(st[0])
+        print("BENCH_JSON:" + json.dumps({{"s": (time.time() - t0) / {iters}}}))
+    """
+    d = run_hostdev_json(code, C)
+    return None if d is None else float(d["s"])
 
 
 def main(argv=None):
@@ -53,6 +81,8 @@ def main(argv=None):
     ap.add_argument("--L", type=int, default=5)
     ap.add_argument("--K-max", type=int, default=24)
     ap.add_argument("--C", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--mesh", action="store_true",
+                    help="also time chains='mesh' on C forced host devices")
     args = ap.parse_args(argv)
 
     rows, lines = [], []
@@ -66,7 +96,7 @@ def main(argv=None):
                              args.K_max))
         per_chain = s / C
         eff = base / per_chain  # >1: amortization from chain batching
-        rows.append((C, s, per_chain, eff))
+        rows.append(("vmap", C, s, per_chain, eff))
         lines.append(
             f"multichain__C{C},{s * 1e6:.0f},"
             f"per_chain_us={per_chain * 1e6:.0f};eff={eff:.2f};"
@@ -74,12 +104,25 @@ def main(argv=None):
         )
         print(lines[-1], flush=True)
 
+    if args.mesh:
+        for C in args.C:
+            s = time_mesh_chains(args.N, args.P, C, args.iters, args.L,
+                                 args.K_max)
+            if s is None:
+                continue
+            rows.append(("mesh", C, s, s / C, base / (s / C)))
+            lines.append(
+                f"meshchains__C{C},{s * 1e6:.0f},"
+                f"per_chain_us={s / C * 1e6:.0f};N={args.N};P={args.P}"
+            )
+            print(lines[-1], flush=True)
+
     os.makedirs(ART, exist_ok=True)
     out = os.path.join(ART, "multichain_scaling.csv")
     with open(out, "w") as fh:
-        fh.write("C,s_per_iter,s_per_chain_iter,amortization\n")
-        for C, s, pc, eff in rows:
-            fh.write(f"{C},{s:.4f},{pc:.4f},{eff:.2f}\n")
+        fh.write("chains,C,s_per_iter,s_per_chain_iter,amortization\n")
+        for layout, C, s, pc, eff in rows:
+            fh.write(f"{layout},{C},{s:.4f},{pc:.4f},{eff:.2f}\n")
     print(f"-> {out}")
     return lines
 

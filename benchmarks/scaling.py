@@ -15,73 +15,51 @@ from __future__ import annotations
 
 import argparse
 import os
-import subprocess
-import sys
-import textwrap
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.ibp import IBPHypers, hybrid_iteration_vmap, init_hybrid
-from repro.data import cambridge_data, shard_rows
+from benchmarks._hostdev import run_hostdev
+from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
+from repro.data import cambridge_data
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
 def time_vmap(N: int, P: int, iters: int, L: int, K_max: int) -> float:
     X, _, _ = cambridge_data(N=N, seed=0)
-    Xs = jnp.asarray(shard_rows(X, P))
-    hyp = IBPHypers()
-    gs, ss = init_hybrid(jax.random.key(0), Xs, K_max, K_tail=8, K_init=4)
-    gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=L, N_global=N)
-    jax.block_until_ready(ss.Z)  # compile
+    s = build_sampler(SamplerSpec(P=P, K_max=K_max, K_tail=8, K_init=4, L=L),
+                      IBPHypers(), X)
+    gs, st = s.init(jax.random.key(0))
+    gs, st = s.step(gs, st)
+    jax.block_until_ready(st.Z)  # compile
     t0 = time.time()
     for _ in range(iters):
-        gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=L, N_global=N)
-    jax.block_until_ready(ss.Z)
+        gs, st = s.step(gs, st)
+    jax.block_until_ready(st.Z)
     return (time.time() - t0) / iters
 
 
 def time_shardmap(N: int, P: int, iters: int, L: int, K_max: int) -> float:
     """Run in a subprocess with P forced devices; returns s/iter."""
-    code = textwrap.dedent(f"""
-        import time, jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding
-        from repro.data import cambridge_data, shard_rows
-        from repro.core.ibp import IBPHypers, init_hybrid, \\
-            make_hybrid_iteration_shardmap
+    code = f"""
+        import time, jax
+        from repro.data import cambridge_data
+        from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
         X, _, _ = cambridge_data(N={N}, seed=0)
-        Pn = {P}
-        Xs = jnp.asarray(shard_rows(X, Pn))
-        gs, ss = init_hybrid(jax.random.key(0), Xs, {K_max}, K_tail=8,
-                             K_init=4)
-        from repro.compat import make_mesh, set_mesh, AxisType
-        mesh = make_mesh((Pn,), ('data',), axis_types=(AxisType.Auto,))
-        step = make_hybrid_iteration_shardmap(mesh, ('data',), IBPHypers(),
-                                              L={L}, N_global={N})
-        with set_mesh(mesh):
-            sh = NamedSharding(mesh, P('data'))
-            Xf = jax.device_put(Xs.reshape(-1, Xs.shape[-1]), sh)
-            Zf = jax.device_put(ss.Z.reshape(-1, {K_max}), sh)
-            Zt = jax.device_put(ss.Z_tail.reshape(-1, 8), sh)
-            ta = jax.device_put(ss.tail_active, sh)
-            gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)   # compile
-            jax.block_until_ready(Zf)
-            t0 = time.time()
-            for _ in range({iters}):
-                gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)
-            jax.block_until_ready(Zf)
+        spec = SamplerSpec(P={P}, K_max={K_max}, K_tail=8, K_init=4, L={L},
+                           data="shardmap")
+        s = build_sampler(spec, IBPHypers(), X)
+        gs, st = s.init(jax.random.key(0))
+        gs, st = s.step(gs, st)   # compile
+        jax.block_until_ready(st[0])
+        t0 = time.time()
+        for _ in range({iters}):
+            gs, st = s.step(gs, st)
+        jax.block_until_ready(st[0])
         print((time.time() - t0) / {iters})
-    """)
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={P}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=900)
-    if out.returncode != 0:
-        raise RuntimeError(out.stderr[-2000:])
+    """
+    out = run_hostdev(code, P)
     return float(out.stdout.strip().splitlines()[-1])
 
 

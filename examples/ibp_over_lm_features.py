@@ -15,9 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.ibp import IBPHypers, hybrid_iteration_vmap, init_hybrid
+from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
 from repro.data.synthetic_lm import SyntheticLM
-from repro.data import shard_rows
 from repro.models import init_model, model_apply
 
 ap = argparse.ArgumentParser()
@@ -57,12 +56,11 @@ X = feats @ proj
 print(f"pooled features: {X.shape}")
 
 # 2. the paper's sampler on the pooled representations, sharded over P
-Xs = jnp.asarray(shard_rows(jax.device_get(X), args.P))
-N = Xs.shape[0] * Xs.shape[1]
-gs, ss = init_hybrid(jax.random.key(1), Xs, K_max=16, K_tail=6, K_init=2)
-hyp = IBPHypers()
+spec = SamplerSpec(P=args.P, K_max=16, K_tail=6, K_init=2, L=3)
+sampler = build_sampler(spec, IBPHypers(), jax.device_get(X))
+gs, ss = sampler.init(jax.random.key(1))
 for it in range(args.iters):
-    gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=3, N_global=N)
+    gs, ss = sampler.step(gs, ss)
 
 K = int(gs.active.sum())
 print(f"IBP over {cfg.name} representations: K+ = {K} latent features, "

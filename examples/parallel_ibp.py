@@ -16,47 +16,39 @@ if "XLA_FLAGS" not in os.environ:  # relaunch with 8 virtual devices
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
-from repro.core.ibp import (IBPHypers, init_hybrid,
-                            make_hybrid_iteration_shardmap)
+from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
 from repro.core.ibp.diagnostics import train_joint_loglik
-from repro.data import cambridge_data, shard_rows
-from repro import compat
+from repro.data import cambridge_data
 
 N, Pn, K_max, K_tail = 320, 8, 16, 6
 print(f"devices: {jax.device_count()} | observations: {N} over P={Pn} shards")
 
 X, _, _ = cambridge_data(N=N, sigma_n=0.5, seed=1)
-Xs = jnp.asarray(shard_rows(X, Pn))
 
-mesh = compat.make_mesh((Pn,), ("data",), axis_types=(compat.AxisType.Auto,))
-gs, ss = init_hybrid(jax.random.key(1), Xs, K_max, K_tail=K_tail, K_init=3)
-step = make_hybrid_iteration_shardmap(mesh, ("data",), IBPHypers(), L=5,
-                                      N_global=N)
+# data="shardmap" puts X and Z physically on a ('data',) mesh of Pn
+# devices; build_sampler owns mesh construction and data placement
+spec = SamplerSpec(P=Pn, K_max=K_max, K_tail=K_tail, K_init=3, L=5,
+                   data="shardmap")
+sampler = build_sampler(spec, IBPHypers(), X)
+gs, st = sampler.init(jax.random.key(1))
 
-with compat.set_mesh(mesh):
-    sh = NamedSharding(mesh, P("data"))
-    # place each observation shard on its device
-    Xf = jax.device_put(Xs.reshape(N, -1), sh)
-    Zf = jax.device_put(ss.Z.reshape(N, K_max), sh)
-    Zt = jax.device_put(ss.Z_tail.reshape(N, K_tail), sh)
-    ta = jax.device_put(ss.tail_active, sh)
+for it in range(60):
+    gs, st = sampler.step(gs, st)
+    # serialize dispatch: 8 virtual devices share one core here, and
+    # letting iterations queue up can starve the collective rendezvous
+    jax.block_until_ready(st[0])
+    if (it + 1) % 20 == 0:
+        Zf = st[0]
+        ll = train_joint_loglik(jnp.asarray(sampler.X_global), Zf, gs.A,
+                                gs.pi, gs.active, gs.sigma_x)
+        print(f"iter {it + 1:3d}: K+ = {int(gs.active.sum())}, "
+              f"p' = shard {int(gs.p_prime)}, "
+              f"log P(X,Z) = {float(ll):.1f}")
 
-    for it in range(60):
-        gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)
-        # serialize dispatch: 8 virtual devices share one core here, and
-        # letting iterations queue up can starve the collective rendezvous
-        jax.block_until_ready(Zf)
-        if (it + 1) % 20 == 0:
-            ll = train_joint_loglik(jnp.asarray(X), Zf, gs.A, gs.pi,
-                                    gs.active, gs.sigma_x)
-            print(f"iter {it + 1:3d}: K+ = {int(gs.active.sum())}, "
-                  f"p' = shard {int(gs.p_prime)}, "
-                  f"log P(X,Z) = {float(ll):.1f}")
-    # Z really is distributed: one shard per device
-    assert len(Zf.sharding.device_set) == Pn
+# Z really is distributed: one shard per device
+Zf = st[0]
+assert len(Zf.sharding.device_set) == Pn
 
 K = int(gs.active.sum())
 assert 3 <= K <= 9, K

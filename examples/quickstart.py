@@ -6,24 +6,25 @@ paper's hybrid parallel MCMC, in ~30 seconds on CPU.
 import jax
 import jax.numpy as jnp
 
-from repro.core.ibp import IBPHypers, hybrid_iteration_vmap, init_hybrid
+from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
 from repro.core.ibp.diagnostics import train_joint_loglik
-from repro.data import cambridge_data, shard_rows
+from repro.data import cambridge_data
 
 # 1. data: X = Z_true @ A_true + noise, four 6x6 base images (N x 36)
 N, P = 200, 4
 X, Z_true, A_true = cambridge_data(N=N, sigma_n=0.5, seed=0)
 
-# 2. shard observations across P "processors" (the paper's data layout);
-#    here simulated with vmap — see parallel_ibp.py for real shard_map
-Xs = jnp.asarray(shard_rows(X, P))
+# 2. one spec holds every knob: P "processors" (the paper's data layout,
+#    here simulated with data="vmap" — see parallel_ibp.py for a real
+#    mesh), feature capacities, sub-iteration count L
+spec = SamplerSpec(P=P, K_max=16, K_tail=6, K_init=3, L=5)
+sampler = build_sampler(spec, IBPHypers(), X)
 
 # 3. init + run the hybrid sampler: uncollapsed sweeps on instantiated
 #    features everywhere, collapsed tail births on one rotating shard p'
-gs, ss = init_hybrid(jax.random.key(0), Xs, K_max=16, K_tail=6, K_init=3)
-hyp = IBPHypers()
+gs, ss = sampler.init(jax.random.key(0))
 for it in range(60):
-    gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=5, N_global=N)
+    gs, ss = sampler.step(gs, ss)
     if (it + 1) % 20 == 0:
         Z = ss.Z.reshape(N, -1)
         ll = train_joint_loglik(jnp.asarray(X), Z, gs.A, gs.pi, gs.active,

@@ -3,15 +3,18 @@ from .sweeps import sufficient_stats, uncollapsed_sweep
 from .collapsed import collapsed_sweep
 from .uncollapsed import uncollapsed_step
 from .hybrid import (
+    HybridFns,
     HybridGlobal,
     HybridShard,
-    hybrid_iteration_multichain,
-    hybrid_iteration_vmap,
-    hybrid_stale_pass,
+    build_hybrid_fns,
     init_hybrid,
     init_multichain,
-    make_hybrid_iteration_shardmap,
-    make_hybrid_stale_pass_shardmap,
+)
+from .api import (
+    DRIVERS,
+    Sampler,
+    SamplerSpec,
+    build_sampler,
 )
 from . import convergence
 
@@ -23,14 +26,15 @@ __all__ = [
     "sufficient_stats",
     "collapsed_sweep",
     "uncollapsed_step",
+    "HybridFns",
     "HybridGlobal",
     "HybridShard",
+    "build_hybrid_fns",
     "init_hybrid",
     "init_multichain",
-    "hybrid_iteration_vmap",
-    "hybrid_iteration_multichain",
-    "hybrid_stale_pass",
-    "make_hybrid_iteration_shardmap",
-    "make_hybrid_stale_pass_shardmap",
+    "DRIVERS",
+    "Sampler",
+    "SamplerSpec",
+    "build_sampler",
     "convergence",
 ]

@@ -26,22 +26,29 @@ Exactness note: on p', the instantiated-feature sweep conditions on A+ only
 (tail contribution not subtracted), exactly as written in the paper's
 pseudocode; the tail sampler sees R = X_p - Z A+ as its data.
 
-Three drivers over the same per-shard kernels:
-  * ``hybrid_iteration_vmap`` — P shards simulated by vmap on one device
-    (CPU benchmarks / tests; psum == sum over the shard axis).
-  * ``hybrid_iteration_multichain`` — a chain axis vmapped OVER the full
-    hybrid iteration: C independent chains (split PRNG keys, independent
-    states) advance in a single jitted step on one device or mesh. This
-    is the backbone of the convergence-diagnostics test suite
-    (``core/ibp/convergence.py``) and of R-hat/ESS reporting in
-    ``runtime/driver.py`` (DESIGN.md §11).
-  * ``make_hybrid_iteration_shardmap`` — shard_map over a mesh data axis
-    (the production path; psum == jax.lax.psum). Mesh construction and
-    shard_map itself go through ``repro.compat`` so the same code runs
-    on JAX 0.4.x and on the modern AxisType/set_mesh API.
+Parallelism is expressed as two ORTHOGONAL axes, not a driver enum
+(DESIGN.md §13): ``spec.chains`` picks the chain layout (``none`` — no
+chain axis; ``vmap`` — C chains vmapped over the full iteration;
+``mesh`` — C chains as a real mesh axis) and ``spec.data`` picks the
+data layout (``vmap`` — P shards simulated by vmap, psum == sum over
+the shard axis; ``shardmap`` — shard_map over a mesh data axis, psum ==
+jax.lax.psum, the production path). ``build_hybrid_fns(spec, hyp, ...)``
+is the ONE construction entry point: it reads every kernel knob
+(``L``, ``backend``, ``collapsed_backend``, ``chol_refresh``, ``sync``)
+off the spec and returns jitted ``(step, stale)`` functions for the
+requested layout — the old per-backend entry points
+(``hybrid_iteration_vmap`` / ``_multichain`` / ``hybrid_stale_pass`` /
+``make_hybrid_iteration_shardmap``) are subsumed by spec layouts.
+Mesh construction and shard_map go through ``repro.compat`` so the same
+code runs on JAX 0.4.x and on the modern AxisType/set_mesh API.
 
-``hybrid_stale_pass`` is the bounded-staleness knob (DESIGN.md §10):
-sub-iterations only, no master sync — explicitly non-exact.
+The ``stale`` function is the bounded-staleness knob (DESIGN.md §10):
+sub-iterations only, no master sync (and, on a mesh, no collectives at
+all) — explicitly non-exact.
+
+Most callers want the higher-level ``build_sampler`` (core/ibp/api.py),
+which wraps these functions in a uniform init/step/stale/to_canonical
+protocol and owns mesh creation + data placement.
 """
 from __future__ import annotations
 
@@ -349,9 +356,10 @@ def _hybrid_iteration_body(
 ) -> tuple[HybridGlobal, HybridShard]:
     """One full hybrid iteration for ONE chain (vmap-simulated shards).
 
-    Kept free of jit/static plumbing so it can be vmapped over a chain
-    axis (``hybrid_iteration_multichain``) as well as jitted directly
-    (``hybrid_iteration_vmap``).
+    Kept free of jit/static plumbing so every layout can reuse it:
+    ``_build_vmap_fns`` jits it directly or vmaps it over a chain axis,
+    and the chains-mesh x data-vmap layout runs it per chain device
+    (``build_hybrid_fns``).
     """
     P_, N_p, D = X_shards.shape
 
@@ -398,27 +406,8 @@ def _hybrid_iteration_body(
     return gs_new, ss_new
 
 
-@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend",
-                                   "collapsed_backend", "chol_refresh"))
-def hybrid_iteration_vmap(
-    X_shards: Array,            # (P, N_p, D)
-    gs: HybridGlobal,
-    ss: HybridShard,
-    hyp,
-    L: int = 5,
-    N_global: int = 0,
-    backend: str = "jnp",
-    collapsed_backend: str = "ref",
-    chol_refresh: int = DEFAULT_REFRESH,
-) -> tuple[HybridGlobal, HybridShard]:
-    P_, N_p, D = X_shards.shape
-    N_g = float(N_global if N_global else P_ * N_p)
-    return _hybrid_iteration_body(X_shards, gs, ss, hyp, L, N_g, backend,
-                                  collapsed_backend, chol_refresh)
-
-
 # --------------------------------------------------------------------------
-# driver 2: chain axis vmapped over the full iteration (multi-chain)
+# multi-chain init: chain axis over every state leaf
 # --------------------------------------------------------------------------
 
 
@@ -439,56 +428,29 @@ def init_multichain(
     return jax.vmap(lambda k: init_hybrid(k, X_shards, K_max, **kw))(keys)
 
 
-@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend",
-                                   "collapsed_backend", "chol_refresh"))
-def hybrid_iteration_multichain(
-    X_shards: Array,            # (P, N_p, D) — shared, NOT chain-batched
-    gs: HybridGlobal,           # leaves lead with chain axis C
-    ss: HybridShard,            # leaves lead with chain axis C
-    hyp,
-    L: int = 5,
-    N_global: int = 0,
-    backend: str = "jnp",
-    collapsed_backend: str = "ref",
-    chol_refresh: int = DEFAULT_REFRESH,
-) -> tuple[HybridGlobal, HybridShard]:
-    """Advance C independent chains one full hybrid iteration, one jit."""
-    P_, N_p, D = X_shards.shape
-    N_g = float(N_global if N_global else P_ * N_p)
-    return jax.vmap(
-        lambda g, s: _hybrid_iteration_body(X_shards, g, s, hyp, L, N_g,
-                                            backend, collapsed_backend,
-                                            chol_refresh)
-    )(gs, ss)
-
-
-@partial(jax.jit, static_argnames=("hyp", "L", "N_global", "backend",
-                                   "collapsed_backend", "chol_refresh"))
-def hybrid_stale_pass(
+def _hybrid_stale_body(
     X_shards: Array,
     gs: HybridGlobal,
     ss: HybridShard,
-    hyp,
-    L: int = 1,
-    N_global: int = 0,
-    backend: str = "jnp",
-    collapsed_backend: str = "ref",
-    chol_refresh: int = DEFAULT_REFRESH,
+    L: int,
+    N_g: float,
+    backend: str,
+    collapsed_backend: str,
+    chol_refresh: int,
 ) -> tuple[HybridGlobal, HybridShard]:
-    """Bounded-staleness pass: shard sub-iterations WITHOUT the master sync.
+    """Bounded-staleness pass for ONE chain: shard sub-iterations WITHOUT
+    the master sync (DESIGN.md §10).
 
     Shards keep Gibbs-sweeping Z (and p' keeps exploring its tail) against
     stale global parameters; tails carry over into the next full
-    iteration's promotion. Non-exact by construction — opt-in via
-    ``DriverConfig.stale_sync`` (DESIGN.md §10).
+    iteration's promotion. Non-exact by construction.
 
     The key consumed by the sweeps (fold 13) and the key handed to the
     next pass (fold 14) MUST differ — returning the consumed key would
     make the next iteration's sub-iterations replay the exact same
     per-(shard, l) uniform stream.
     """
-    P_, N_p, D = X_shards.shape
-    N_g = float(N_global if N_global else P_ * N_p)
+    P_ = X_shards.shape[0]
     gs_sweep = dataclasses.replace(gs, key=jax.random.fold_in(gs.key, 13))
     sub = partial(shard_sub_iterations, N_global=N_g, L=L, backend=backend,
                   collapsed_backend=collapsed_backend,
@@ -500,75 +462,93 @@ def hybrid_stale_pass(
     return gs_out, HybridShard(Z=Z, Z_tail=Z_tail, tail_active=tail_active)
 
 
-def make_hybrid_stale_pass_shardmap(
-    mesh,
-    data_axes: tuple[str, ...],
-    L: int = 1,
-    N_global: int = 0,
-    backend: str = "jnp",
-    collapsed_backend: str = "ref",
-    chol_refresh: int = DEFAULT_REFRESH,
-):
-    """shard_map counterpart of ``hybrid_stale_pass``: sub-iterations with
-    NO collectives at all — the whole point of bounded staleness on a real
-    mesh is skipping the sync, so the pass must not leave the mesh layout
-    or touch psum. Bitwise-equivalent to the vmap stale pass (same fold-13
-    sweep key, same fold-14 key advance)."""
-
-    def step(X, gs: HybridGlobal, Z, Z_tail, tail_active):
-        N, D = X.shape
-        N_g = float(N_global if N_global else N)
-
-        def shard_fn(X_p, gs, Z_p, Zt_p, ta_p):
-            ta = ta_p[0]
-            idx = compat.axis_index(data_axes)
-            gs_sweep = dataclasses.replace(
-                gs, key=jax.random.fold_in(gs.key, 13)
-            )
-            Z_p, Zt_p, ta = shard_sub_iterations(
-                X_p, Z_p, Zt_p, ta, gs_sweep, idx, N_g, L, backend,
-                collapsed_backend, chol_refresh
-            )
-            gs_out = dataclasses.replace(
-                gs, key=jax.random.fold_in(gs.key, 14)
-            )
-            return gs_out, Z_p, Zt_p, ta[None, :]
-
-        shard_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
-        gspec = jax.tree.map(lambda _: P(), gs)
-        return compat.shard_map(
-            shard_fn,
-            mesh=mesh,
-            in_specs=(shard_spec, gspec, shard_spec, shard_spec, shard_spec),
-            out_specs=(gspec, shard_spec, shard_spec, shard_spec),
-            check_vma=False,
-        )(X, gs, Z, Z_tail, tail_active)
-
-    return jax.jit(step)
-
-
 # --------------------------------------------------------------------------
-# driver 3: shard_map over a mesh (the production path)
+# THE spec-driven construction path (DESIGN.md §13)
 # --------------------------------------------------------------------------
 
 
-def make_hybrid_iteration_shardmap(
-    mesh,
-    data_axes: tuple[str, ...],
+@dataclasses.dataclass(frozen=True)
+class HybridFns:
+    """Jitted iteration functions in a layout's NATIVE calling convention.
+
+    * data="vmap" layouts (chains "none"/"vmap"):
+        ``step(X_shards, gs, ss) -> (gs, ss)`` with HybridShard state
+        (chain-batched leaves when chains="vmap").
+    * mesh layouts (data="shardmap" and/or chains="mesh"):
+        ``step(X_native, gs, Z, Z_tail, tail_active) -> (gs, Z, Zt, ta)``
+        with device-resident mesh-layout buffers.
+
+    ``stale`` is the bounded-staleness pass in the same convention.
+    """
+
+    step: Any
+    stale: Any
+
+
+def build_hybrid_fns(
+    spec,
     hyp,
-    L: int = 5,
-    N_global: int = 0,
-    backend: str = "jnp",
-    sync: str = "staged",
-    collapsed_backend: str = "ref",
-    chol_refresh: int = DEFAULT_REFRESH,
-):
-    """Build a jitted hybrid iteration sharded over ``data_axes`` of ``mesh``.
+    *,
+    N_global: int,
+    mesh=None,
+    data_axes: tuple[str, ...] = ("data",),
+    chain_axes: tuple[str, ...] = ("chains",),
+) -> HybridFns:
+    """Build the hybrid iteration for ``spec``'s parallelism layout.
 
-    X: (N, D) sharded over rows; Z likewise; tail buffers (P, K_tail) with the
-    leading shard axis; global params replicated.
+    This is hybrid.py's ONE construction entry point: every kernel knob
+    (``L``, ``backend``, ``collapsed_backend``, ``chol_refresh``,
+    ``sync``) and the parallelism layout (``chains`` x ``data``) are read
+    off ``spec`` (a ``repro.core.ibp.api.SamplerSpec`` or anything with
+    those attributes). ``mesh`` is required for shard_map layouts;
+    ``data_axes`` may name several mesh axes (flattened into the P
+    processors — the production dry-run path), ``chain_axes`` exactly one.
 
-    ``sync`` selects the master-sync schedule (§Perf cell 3):
+    The same per-shard kernels back every layout, so the statistical
+    algorithm is identical everywhere; only psum's realization changes
+    (sum over a vmap axis vs. jax.lax.psum over mesh axes).
+    """
+    N_g = float(N_global)
+    if spec.chains in ("none", "vmap") and spec.data == "vmap":
+        return _build_vmap_fns(spec, hyp, N_g)
+    if mesh is None:
+        raise ValueError(
+            f"layout chains={spec.chains!r} x data={spec.data!r} needs a "
+            f"mesh; pass mesh= (build_sampler constructs one from the spec)"
+        )
+    return _build_mesh_fns(spec, hyp, N_g, mesh, data_axes, chain_axes)
+
+
+def _build_vmap_fns(spec, hyp, N_g: float) -> HybridFns:
+    """Single-device layouts: P shards simulated by vmap, optional chain
+    axis vmapped OVER the full iteration (DESIGN.md §11)."""
+    L, be = spec.L, spec.backend
+    cb, cr = spec.collapsed_backend, spec.chol_refresh
+
+    def step_one(Xs, gs, ss):
+        return _hybrid_iteration_body(Xs, gs, ss, hyp, L, N_g, be, cb, cr)
+
+    def stale_one(Xs, gs, ss):
+        return _hybrid_stale_body(Xs, gs, ss, L, N_g, be, cb, cr)
+
+    if spec.chains == "vmap":
+        # built ONCE as jit(vmap(...)) — a bare vmap-of-jit would re-trace
+        # the full iteration body on every call
+        step = jax.vmap(step_one, in_axes=(None, 0, 0))
+        stale = jax.vmap(stale_one, in_axes=(None, 0, 0))
+    else:
+        step, stale = step_one, stale_one
+    return HybridFns(step=jax.jit(step), stale=jax.jit(stale))
+
+
+def _build_mesh_fns(spec, hyp, N_g: float, mesh,
+                    data_axes: tuple[str, ...],
+                    chain_axes: tuple[str, ...]) -> HybridFns:
+    """shard_map layouts: data sharded over ``data_axes``
+    (spec.data="shardmap") and/or chains sharded over ``chain_axes``
+    (spec.chains="mesh"); composing both gives the 2-D chains x data mesh.
+
+    ``spec.sync`` selects the master-sync schedule (DESIGN.md §8):
 
     * ``"staged"`` — three sequential all-reduces (tail mask -> promote ->
       (m, ZtZ, ZtX) -> draw A -> sse), a direct transliteration of the
@@ -583,102 +563,175 @@ def make_hybrid_iteration_shardmap(
       mask and tr(X^T X) ride in the same flattened payload. At the paper's
       statistics sizes (K <= 64) the sync is latency-bound, so collective
       COUNT, not bytes, is the cost — 3x fewer round trips.
+
+    The stale pass runs with NO collectives at all — the whole point of
+    bounded staleness on a real mesh is skipping the sync, so it never
+    leaves the mesh layout or touches psum. Bitwise-equivalent to the
+    vmap stale pass (same fold-13 sweep key, same fold-14 key advance).
+
+    Chains are independent by construction: each chain block carries its
+    own replicated master (gs leaves sharded over the chain axis), and no
+    collective ever crosses ``chain_axes`` — the composed layout is C
+    independent copies of the data-parallel algorithm.
     """
     import numpy as np
 
+    L, be = spec.L, spec.backend
+    cb, cr = spec.collapsed_backend, spec.chol_refresh
+    sync = spec.sync
+    chainful = spec.chains == "mesh"
+    data_sharded = spec.data == "shardmap"
     if sync not in ("staged", "fused"):
         raise ValueError(f"sync={sync!r} not in ('staged', 'fused')")
-    axis_sizes = [mesh.shape[a] for a in data_axes]
-    P_ = int(np.prod(axis_sizes))
+    if chainful and len(chain_axes) != 1:
+        raise ValueError(f"chains='mesh' needs exactly one chain axis, "
+                         f"got {chain_axes}")
+    P_ = (int(np.prod([mesh.shape[a] for a in data_axes]))
+          if data_sharded else spec.P)
+    d_ent = data_axes if len(data_axes) > 1 else data_axes[0]
 
-    def step(X, gs: HybridGlobal, Z, Z_tail, tail_active):
-        N, D = X.shape
-        N_g = float(N_global if N_global else N)
+    def make_fn(stale: bool):
+        def call(X, gs: HybridGlobal, Z, Z_tail, tail_active):
+            D = X.shape[-1]
 
-        def finish(gs, A, pi, active, sse, n_drop, Zt_p, ta_p):
-            sigma_x, sigma_a, alpha, p_prime = master_step2(
-                sse, A, active, gs, hyp, N_g, D, P_
-            )
-            gs_new = HybridGlobal(
-                A=A, pi=pi, active=active, alpha=alpha,
-                sigma_x=sigma_x, sigma_a=sigma_a,
-                key=jax.random.fold_in(gs.key, 7),
-                p_prime=p_prime, it=gs.it + 1,
-                overflow=gs.overflow + n_drop,
-            )
-            return gs_new, jnp.zeros_like(Zt_p), jnp.zeros_like(ta_p)
+            def finish(gs, A, pi, active, sse, n_drop, Zt_p, ta_p):
+                sigma_x, sigma_a, alpha, p_prime = master_step2(
+                    sse, A, active, gs, hyp, N_g, D, P_
+                )
+                gs_new = HybridGlobal(
+                    A=A, pi=pi, active=active, alpha=alpha,
+                    sigma_x=sigma_x, sigma_a=sigma_a,
+                    key=jax.random.fold_in(gs.key, 7),
+                    p_prime=p_prime, it=gs.it + 1,
+                    overflow=gs.overflow + n_drop,
+                )
+                return gs_new, jnp.zeros_like(Zt_p), jnp.zeros_like(ta_p)
 
-        def shard_fn_staged(X_p, gs, Z_p, Zt_p, ta_p):
-            ta = ta_p[0]  # (1, K_tail) local block -> (K_tail,)
-            idx = compat.axis_index(data_axes)
-            Z_p, Zt_p2, ta = shard_sub_iterations(
-                X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, backend,
-                collapsed_backend, chol_refresh
-            )
-            tail_g = jax.lax.psum(ta, data_axes)                    # AR 1
-            Z_p, active_new, n_drop = promote_tail(Z_p, Zt_p2, tail_g, gs.active)
-            stats = local_stats(X_p, Z_p)
-            stats = jax.lax.psum(stats, data_axes)                  # AR 2
-            A, pi, active, m = master_step1(stats, active_new, gs, N_g, D)
-            Z_p = Z_p * active[None, :]
-            sse = jax.lax.psum(                                      # AR 3
-                local_sse(X_p, Z_p, A, active), data_axes)
-            gs_new, Zt0, ta0 = finish(gs, A, pi, active, sse, n_drop,
-                                      Zt_p, ta_p)
-            return gs_new, Z_p, Zt0, ta0
+            def block_stale(X_p, gs, Z_p, Zt_p, ta_p):
+                ta = ta_p[0]
+                idx = compat.axis_index(data_axes)
+                gs_sweep = dataclasses.replace(
+                    gs, key=jax.random.fold_in(gs.key, 13)
+                )
+                Z_p, Zt_p, ta = shard_sub_iterations(
+                    X_p, Z_p, Zt_p, ta, gs_sweep, idx, N_g, L, be, cb, cr
+                )
+                gs_out = dataclasses.replace(
+                    gs, key=jax.random.fold_in(gs.key, 14)
+                )
+                return gs_out, Z_p, Zt_p, ta[None, :]
 
-        def shard_fn_fused(X_p, gs, Z_p, Zt_p, ta_p):
-            ta = ta_p[0]
-            idx = compat.axis_index(data_axes)
-            Z_p, Zt_p2, ta = shard_sub_iterations(
-                X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, backend,
-                collapsed_backend, chol_refresh
-            )
-            K_max = Z_p.shape[1]
-            K_tail = ta.shape[0]
-            # local stats WITH own tail pre-scattered (non-p' adds zeros;
-            # p' uses the same deterministic slot assignment every shard
-            # re-derives after the reduce)
-            Z_stats, _, _ = promote_tail(Z_p, Zt_p2, ta, gs.active)
-            stats = local_stats(X_p, Z_stats)
-            payload = jnp.concatenate([
-                stats["ZtZ"].reshape(-1),
-                stats["ZtX"].reshape(-1),
-                stats["m"],
-                ta,
-                jnp.sum(X_p * X_p)[None],
-            ])
-            g = jax.lax.psum(payload, data_axes)                    # AR (only)
-            o1 = K_max * K_max
-            o2 = o1 + K_max * X_p.shape[1]
-            ZtZ = g[:o1].reshape(K_max, K_max)
-            ZtX = g[o1:o2].reshape(K_max, X_p.shape[1])
-            m_g = g[o2:o2 + K_max]
-            tail_g = g[o2 + K_max:o2 + K_max + K_tail]
-            xx = g[-1]
-            Z_p, active_new, n_drop = promote_tail(Z_p, Zt_p2, tail_g,
-                                                   gs.active)
-            A, pi, active, m = master_step1(
-                {"m": m_g, "ZtZ": ZtZ, "ZtX": ZtX}, active_new, gs, N_g, D
-            )
-            Z_p = Z_p * active[None, :]
-            # SSE identity — exact, no second reduction
-            ZtXm = ZtX * active[:, None]
-            ZtZm = ZtZ * ibm.mask_outer(active)
-            sse = xx - 2.0 * jnp.sum(A * ZtXm) + jnp.sum(A * (ZtZm @ A))
-            gs_new, Zt0, ta0 = finish(gs, A, pi, active, sse, n_drop,
-                                      Zt_p, ta_p)
-            return gs_new, Z_p, Zt0, ta0
+            def block_staged(X_p, gs, Z_p, Zt_p, ta_p):
+                ta = ta_p[0]  # (1, K_tail) local block -> (K_tail,)
+                idx = compat.axis_index(data_axes)
+                Z_p, Zt_p2, ta = shard_sub_iterations(
+                    X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, be, cb, cr
+                )
+                tail_g = jax.lax.psum(ta, data_axes)                # AR 1
+                Z_p, active_new, n_drop = promote_tail(Z_p, Zt_p2, tail_g,
+                                                       gs.active)
+                stats = local_stats(X_p, Z_p)
+                stats = jax.lax.psum(stats, data_axes)              # AR 2
+                A, pi, active, m = master_step1(stats, active_new, gs,
+                                                N_g, D)
+                Z_p = Z_p * active[None, :]
+                sse = jax.lax.psum(                                  # AR 3
+                    local_sse(X_p, Z_p, A, active), data_axes)
+                gs_new, Zt0, ta0 = finish(gs, A, pi, active, sse, n_drop,
+                                          Zt_p, ta_p)
+                return gs_new, Z_p, Zt0, ta0
 
-        shard_fn = shard_fn_fused if sync == "fused" else shard_fn_staged
-        shard_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
-        gspec = jax.tree.map(lambda _: P(), gs)
-        return compat.shard_map(
-            shard_fn,
-            mesh=mesh,
-            in_specs=(shard_spec, gspec, shard_spec, shard_spec, shard_spec),
-            out_specs=(gspec, shard_spec, shard_spec, shard_spec),
-            check_vma=False,
-        )(X, gs, Z, Z_tail, tail_active)
+            def block_fused(X_p, gs, Z_p, Zt_p, ta_p):
+                ta = ta_p[0]
+                idx = compat.axis_index(data_axes)
+                Z_p, Zt_p2, ta = shard_sub_iterations(
+                    X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, be, cb, cr
+                )
+                K_max = Z_p.shape[1]
+                K_tail = ta.shape[0]
+                # local stats WITH own tail pre-scattered (non-p' adds
+                # zeros; p' uses the same deterministic slot assignment
+                # every shard re-derives after the reduce)
+                Z_stats, _, _ = promote_tail(Z_p, Zt_p2, ta, gs.active)
+                stats = local_stats(X_p, Z_stats)
+                payload = jnp.concatenate([
+                    stats["ZtZ"].reshape(-1),
+                    stats["ZtX"].reshape(-1),
+                    stats["m"],
+                    ta,
+                    jnp.sum(X_p * X_p)[None],
+                ])
+                g = jax.lax.psum(payload, data_axes)                # AR (only)
+                o1 = K_max * K_max
+                o2 = o1 + K_max * X_p.shape[1]
+                ZtZ = g[:o1].reshape(K_max, K_max)
+                ZtX = g[o1:o2].reshape(K_max, X_p.shape[1])
+                m_g = g[o2:o2 + K_max]
+                tail_g = g[o2 + K_max:o2 + K_max + K_tail]
+                xx = g[-1]
+                Z_p, active_new, n_drop = promote_tail(Z_p, Zt_p2, tail_g,
+                                                       gs.active)
+                A, pi, active, m = master_step1(
+                    {"m": m_g, "ZtZ": ZtZ, "ZtX": ZtX}, active_new, gs,
+                    N_g, D
+                )
+                Z_p = Z_p * active[None, :]
+                # SSE identity — exact, no second reduction
+                ZtXm = ZtX * active[:, None]
+                ZtZm = ZtZ * ibm.mask_outer(active)
+                sse = xx - 2.0 * jnp.sum(A * ZtXm) + jnp.sum(A * (ZtZm @ A))
+                gs_new, Zt0, ta0 = finish(gs, A, pi, active, sse, n_drop,
+                                          Zt_p, ta_p)
+                return gs_new, Z_p, Zt0, ta0
 
-    return jax.jit(step)
+            def block_vmap_data(X_full, gs, Z_c, Zt_c, ta_c):
+                # data axis simulated by vmap INSIDE this chain's device:
+                # one full single-chain iteration, no collectives
+                ss_c = HybridShard(Z=Z_c, Z_tail=Zt_c, tail_active=ta_c)
+                if stale:
+                    gs2, ss2 = _hybrid_stale_body(X_full, gs, ss_c, L, N_g,
+                                                  be, cb, cr)
+                else:
+                    gs2, ss2 = _hybrid_iteration_body(X_full, gs, ss_c, hyp,
+                                                      L, N_g, be, cb, cr)
+                return gs2, ss2.Z, ss2.Z_tail, ss2.tail_active
+
+            if data_sharded:
+                block = block_stale if stale else (
+                    block_fused if sync == "fused" else block_staged)
+            else:
+                block = block_vmap_data
+
+            if chainful:
+                def shard_fn(X_b, gs_b, Z_b, Zt_b, ta_b):
+                    # strip this chain's length-1 block axis, run the
+                    # single-chain block, put the axis back
+                    gs_c = jax.tree.map(lambda x: x[0], gs_b)
+                    gs2, Z2, Zt2, ta2 = block(X_b, gs_c, Z_b[0], Zt_b[0],
+                                              ta_b[0])
+                    return (jax.tree.map(lambda x: x[None], gs2),
+                            Z2[None], Zt2[None], ta2[None])
+            else:
+                shard_fn = block
+
+            c_ent = chain_axes[0]
+            if chainful and data_sharded:
+                x_spec = P(d_ent)                 # replicated over chains
+                g_leaf, z_spec = P(c_ent), P(c_ent, d_ent)
+            elif chainful:
+                x_spec = P()                      # full (P, N_p, D) copy
+                g_leaf = z_spec = P(c_ent)
+            else:
+                x_spec, g_leaf, z_spec = P(d_ent), P(), P(d_ent)
+            gspec = jax.tree.map(lambda _: g_leaf, gs)
+            return compat.shard_map(
+                shard_fn,
+                mesh=mesh,
+                in_specs=(x_spec, gspec, z_spec, z_spec, z_spec),
+                out_specs=(gspec, z_spec, z_spec, z_spec),
+                check_vma=False,
+            )(X, gs, Z, Z_tail, tail_active)
+
+        return jax.jit(call)
+
+    return HybridFns(step=make_fn(stale=False), stale=make_fn(stale=True))

@@ -103,6 +103,16 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
     return out
 
 
+def cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across JAX versions: 0.4.x
+    returns a list with one dict per device program, newer versions the
+    dict itself."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def build_step(cfg, shape, mesh, force_param_bytes: int | None = None):
     """Returns (jitted_fn, example_args as ShapeDtypeStructs w/ shardings)."""
     serve = shape.mode != "train"
@@ -191,7 +201,7 @@ def run_cell(arch: str, shape, mesh_name: str, force: bool = False) -> dict:
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = cost_dict(compiled)
             hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         rec.update(
@@ -237,7 +247,7 @@ def run_ibp_cell(mesh_name: str, *, N: int = 1 << 20, D: int = 36,
     from jax.sharding import NamedSharding
     from jax.sharding import PartitionSpec as P
 
-    from repro.core.ibp import IBPHypers, make_hybrid_iteration_shardmap
+    from repro.core.ibp import IBPHypers, SamplerSpec, build_hybrid_fns
 
     os.makedirs(ARTIFACTS, exist_ok=True)
     name = f"ibp-hybrid__{tag}" + ("" if sync == "staged" else f"-{sync}")
@@ -257,9 +267,12 @@ def run_ibp_cell(mesh_name: str, *, N: int = 1 << 20, D: int = 36,
     t0 = time.time()
     try:
         with compat.set_mesh(mesh):
-            step = make_hybrid_iteration_shardmap(
-                mesh, axes, IBPHypers(), L=L, N_global=N, sync=sync
-            )
+            # every production mesh axis is a data axis here (flattened
+            # into the paper's P processors); no chain axis in this cell
+            spec = SamplerSpec(P=P_, L=L, K_max=K_max, K_tail=K_tail,
+                               data="shardmap", sync=sync)
+            step = build_hybrid_fns(spec, IBPHypers(), N_global=N,
+                                    mesh=mesh, data_axes=axes).step
             f32 = jnp.float32
             row_sh = NamedSharding(mesh, P(axes))
             rep = NamedSharding(mesh, P())
@@ -288,7 +301,7 @@ def run_ibp_cell(mesh_name: str, *, N: int = 1 << 20, D: int = 36,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = cost_dict(compiled)
             hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         rec.update(
@@ -370,7 +383,7 @@ def run_probe(arch: str, shape, mesh_name: str, force: bool = False) -> dict:
                     cfg_l, shape, mesh, force_param_bytes=full_pbytes
                 )
                 compiled = fn.lower(*args).compile()
-                cost = compiled.cost_analysis()
+                cost = cost_dict(compiled)
                 hlo = compiled.as_text()
             coll = collective_bytes(hlo)
             probes[str(L)] = {

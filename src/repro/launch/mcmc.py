@@ -1,9 +1,17 @@
 """IBP hybrid-MCMC launcher — the paper's experiment, end to end.
 
+The CLI builds a ``SamplerSpec`` (DESIGN.md §13) and hands it to
+``MCMCDriver``; ``--driver`` names a point on the composable
+``chains`` x ``data`` parallelism grid.
+
 Usage:
   python -m repro.launch.mcmc --N 1000 --P 5 --iters 1000 --L 5
   python -m repro.launch.mcmc --driver multichain --chains 4   # + R-hat/ESS
-  python -m repro.launch.mcmc --driver shardmap --sync fused   # mesh path
+  python -m repro.launch.mcmc --driver shardmap --sync fused   # data mesh
+  # composed: C chains x P data shards on a 2-D ("chains","data") mesh —
+  # on CPU, force C*P host devices first:
+  #   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+  python -m repro.launch.mcmc --driver mesh --chains 2 --P 2
 """
 from __future__ import annotations
 
@@ -11,10 +19,11 @@ import argparse
 import json
 import os
 
-from repro.core.ibp import IBPHypers
+from repro.core.ibp import IBPHypers, SamplerSpec
+from repro.core.ibp.api import DRIVERS
 from repro.core.ibp.collapsed import DEFAULT_REFRESH
 from repro.data import cambridge_data, train_eval_split
-from repro.runtime import DriverConfig, MCMCDriver
+from repro.runtime import MCMCDriver
 
 
 def main(argv=None):
@@ -27,21 +36,28 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sigma-n", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default="artifacts/ckpt/mcmc")
+    ap.add_argument("--eval-every", type=int, default=20)
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
-    ap.add_argument("--driver", default="vmap",
-                    choices=["vmap", "multichain", "shardmap"])
+    ap.add_argument("--driver", default="vmap", choices=sorted(DRIVERS),
+                    help="parallelism layout: vmap (single device), "
+                         "multichain (C chains vmapped), shardmap (P-device "
+                         "data mesh), mesh (C chains x P data shards on a "
+                         "2-D mesh; needs C*P devices)")
     ap.add_argument("--chains", type=int, default=None,
-                    help="chain count for --driver multichain (default 4); "
-                         "values > 1 require that driver")
+                    help="chain count for --driver multichain/mesh "
+                         "(default 4 / 2); values > 1 require a chainful "
+                         "driver")
     ap.add_argument("--sync", default="staged", choices=["staged", "fused"],
-                    help="master-sync schedule for --driver shardmap")
+                    help="master-sync schedule for --driver shardmap/mesh")
     ap.add_argument("--stale-sync", type=int, default=0,
                     help="bounded-staleness passes per iteration (non-exact)")
-    ap.add_argument("--collapsed-backend", default="ref",
+    ap.add_argument("--collapsed-backend", default="fast",
                     choices=["ref", "fast", "pallas"],
-                    help="tail collapsed row step: fresh O(K^3) factorization "
-                         "per row (ref), rank-one Cholesky carry (fast), or "
-                         "fast + Pallas bit-flip kernel (pallas)")
+                    help="tail collapsed row step (default: fast — the "
+                         "rank-one Cholesky carry, certified equivalent to "
+                         "ref by the PR-2 suite and CI soak). ref keeps the "
+                         "fresh O(K^3) factorization per row; pallas adds "
+                         "the Pallas bit-flip kernel on top of fast")
     ap.add_argument("--chol-refresh", type=int, default=DEFAULT_REFRESH,
                     help="exact-refactorization cadence of the fast/pallas "
                          "collapsed backend (rows between refreshes)")
@@ -52,19 +68,20 @@ def main(argv=None):
                                      seed=args.seed)
     X_train, X_eval = train_eval_split(X, eval_frac=0.1, seed=args.seed)
 
-    cfg = DriverConfig(
+    chains, data = DRIVERS[args.driver]
+    # explicit --chains passes through so spec validation can reject it
+    # loudly under a chainless driver; the default never does
+    default_chains = {"multichain": 4, "mesh": 2}.get(args.driver, 1)
+    spec = SamplerSpec(
         P=args.P, K_max=args.K_max, L=args.L, n_iters=args.iters,
-        ckpt_dir=args.ckpt_dir, seed=args.seed, backend=args.backend,
-        driver=args.driver,
-        # explicit --chains passes through so the driver's validation can
-        # reject it loudly under the wrong driver; the default never does
-        n_chains=(args.chains if args.chains is not None
-                  else (4 if args.driver == "multichain" else 1)),
+        eval_every=args.eval_every, ckpt_dir=args.ckpt_dir, seed=args.seed,
+        backend=args.backend, chains=chains, data=data,
+        n_chains=(args.chains if args.chains is not None else default_chains),
         sync=args.sync, stale_sync=args.stale_sync,
         collapsed_backend=args.collapsed_backend,
         chol_refresh=args.chol_refresh,
     )
-    drv = MCMCDriver(X_train, cfg, IBPHypers(), X_eval=X_eval)
+    drv = MCMCDriver(X_train, spec, IBPHypers(), X_eval=X_eval)
 
     def show(r):
         line = (

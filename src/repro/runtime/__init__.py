@@ -1,3 +1,12 @@
-from .driver import MCMCDriver, DriverConfig
+from repro.core.ibp.api import Sampler, SamplerSpec, build_sampler
 
-__all__ = ["MCMCDriver", "DriverConfig"]
+from .driver import DriverConfig, MCMCDriver, as_spec
+
+__all__ = [
+    "MCMCDriver",
+    "DriverConfig",
+    "SamplerSpec",
+    "Sampler",
+    "build_sampler",
+    "as_spec",
+]

@@ -1,5 +1,6 @@
-"""Fault-tolerant MCMC driver: backend selection, multi-chain inference,
-checkpoint/restart, elastic re-sharding, capacity growth, diagnostics.
+"""Fault-tolerant MCMC driver: run loop, checkpoint/restart, elastic
+re-sharding, capacity growth, diagnostics — over a ``Sampler`` built by
+``build_sampler`` (DESIGN.md §13).
 
 Large-scale runnability contract (DESIGN.md §10):
 
@@ -19,17 +20,23 @@ Large-scale runnability contract (DESIGN.md §10):
   staleness: that many sync-free sub-iteration passes are interleaved
   before each full iteration) exists as an opt-in knob and is non-exact.
 
-Backend selection (DESIGN.md §11): ``DriverConfig.driver`` picks how one
-iteration is computed — the statistical kernel is identical in all three:
+Parallelism layout (DESIGN.md §13): the driver takes a ``SamplerSpec``
+(or a legacy ``DriverConfig``, kept as a thin shim that maps the old
+scattered kwargs onto a spec) and builds ONE ``Sampler`` whose
+``chains`` x ``data`` axes replace the old backend enum:
 
-* ``"vmap"``       — P shards simulated by vmap on one device (default).
-* ``"multichain"`` — C independent chains (``n_chains``) advanced in one
-  jitted step via a chain axis vmapped over the full iteration; eval
-  records report split-R-hat / ESS / MCSE over the per-iteration trace.
-* ``"shardmap"``   — the production collective path over a ``(data,)``
-  mesh of P devices (``sync`` selects the staged/fused master schedule).
-  State crosses the driver boundary in the canonical (P, N_p, K) layout,
-  so checkpoints are interchangeable across all backends.
+* ``driver="vmap"``       — chains "none"  x data "vmap"
+* ``driver="multichain"`` — chains "vmap"  x data "vmap" (R-hat/ESS/MCSE
+  over the per-iteration trace in eval records)
+* ``driver="shardmap"``   — chains "none"  x data "shardmap"
+* ``driver="mesh"``       — chains "mesh"  x data "shardmap": C chains x
+  P data shards on a 2-D ``("chains", "data")`` mesh — the composed path
+  (multichain diagnostics AND real data collectives), runnable on CPU
+  via ``--xla_force_host_platform_device_count``.
+
+State crosses the driver boundary in the canonical (C?, P, N_p, K)
+layout, so checkpoints are interchangeable across all layouts with the
+same chain count.
 """
 from __future__ import annotations
 
@@ -42,29 +49,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import restore, save_pytree
+from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
+from repro.core.ibp import convergence
+from repro.core.ibp.api import DRIVERS
 from repro.core.ibp.collapsed import (
-    COLLAPSED_BACKENDS,
     DEFAULT_REFRESH as DEFAULT_CHOL_REFRESH,
 )
-from repro.core.ibp import (
-    IBPHypers,
-    hybrid_iteration_multichain,
-    hybrid_iteration_vmap,
-    hybrid_stale_pass,
-    init_hybrid,
-    init_multichain,
-    make_hybrid_iteration_shardmap,
-    make_hybrid_stale_pass_shardmap,
-)
-from repro.core.ibp import convergence
 from repro.core.ibp.hybrid import HybridGlobal, HybridShard
 from repro.core.ibp.diagnostics import heldout_joint_loglik, train_joint_loglik
 
-BACKENDS = ("vmap", "multichain", "shardmap")
+BACKENDS = tuple(DRIVERS)  # historical name for the driver grid
 
 
 @dataclasses.dataclass
 class DriverConfig:
+    """DEPRECATED shim: the old scattered-kwarg construction surface.
+
+    Maps 1:1 onto ``SamplerSpec`` via ``to_spec()`` (see the migration
+    table in DESIGN.md §13). New code should construct a ``SamplerSpec``
+    directly — the spec validates every knob combination loudly and
+    expresses parallelism as composable ``chains`` x ``data`` axes
+    instead of the ``driver`` enum.
+    """
+
     P: int = 4
     K_max: int = 32
     K_tail: int = 8
@@ -79,13 +86,35 @@ class DriverConfig:
     sigma_a: float = 1.0
     K_init: int = 4
     backend: str = "jnp"       # "jnp" | "pallas" for the uncollapsed sweep
-    stale_sync: int = 0        # >0 = bounded staleness (non-exact, off by default)
-    driver: str = "vmap"       # "vmap" | "multichain" | "shardmap"
-    n_chains: int = 1          # chain count for driver="multichain"
-    sync: str = "staged"       # "staged" | "fused" master sync (shardmap only)
-    overflow_every: int = 8    # overflow-detection cadence (host sync each check)
-    collapsed_backend: str = "ref"  # "ref" | "fast" | "pallas" tail row step
-    chol_refresh: int = DEFAULT_CHOL_REFRESH  # "fast"/"pallas" refactor cadence
+    stale_sync: int = 0        # >0 = bounded staleness (non-exact)
+    driver: str = "vmap"       # "vmap"|"multichain"|"shardmap"|"mesh"
+    n_chains: int = 1          # chain count (multichain / mesh)
+    sync: str = "staged"       # "staged" | "fused" master sync (collective)
+    overflow_every: int = 8    # overflow-detection cadence (host sync)
+    collapsed_backend: str = "fast"  # "ref" | "fast" | "pallas" tail step
+    chol_refresh: int = DEFAULT_CHOL_REFRESH  # "fast"/"pallas" cadence
+
+    def to_spec(self) -> SamplerSpec:
+        if self.driver not in DRIVERS:
+            raise ValueError(f"driver={self.driver!r} not in {BACKENDS}")
+        chains, data = DRIVERS[self.driver]
+        return SamplerSpec(
+            P=self.P, K_max=self.K_max, K_tail=self.K_tail,
+            K_init=self.K_init, alpha=self.alpha, sigma_x=self.sigma_x,
+            sigma_a=self.sigma_a, L=self.L, backend=self.backend,
+            collapsed_backend=self.collapsed_backend,
+            chol_refresh=self.chol_refresh,
+            chains=chains, data=data, n_chains=self.n_chains,
+            sync=self.sync, stale_sync=self.stale_sync,
+            n_iters=self.n_iters, eval_every=self.eval_every,
+            ckpt_every=self.ckpt_every, ckpt_dir=self.ckpt_dir,
+            overflow_every=self.overflow_every, seed=self.seed,
+        )
+
+
+def as_spec(cfg: DriverConfig | SamplerSpec) -> SamplerSpec:
+    """Normalize either config surface to a validated SamplerSpec."""
+    return cfg.to_spec() if isinstance(cfg, DriverConfig) else cfg
 
 
 def _pad_trailing(x: jax.Array, axis: int, n: int) -> jax.Array:
@@ -95,152 +124,25 @@ def _pad_trailing(x: jax.Array, axis: int, n: int) -> jax.Array:
 
 
 class MCMCDriver:
-    """Runs the hybrid sampler with checkpoint/restart + elastic P."""
+    """Runs a built Sampler with checkpoint/restart + elastic P."""
 
-    def __init__(self, X: np.ndarray, cfg: DriverConfig,
+    def __init__(self, X: np.ndarray, cfg: DriverConfig | SamplerSpec,
                  hyp: IBPHypers | None = None, X_eval: np.ndarray | None = None):
-        if cfg.driver not in BACKENDS:
-            raise ValueError(f"driver={cfg.driver!r} not in {BACKENDS}")
-        if cfg.driver == "multichain" and cfg.n_chains < 1:
-            raise ValueError("multichain driver needs n_chains >= 1")
-        if cfg.driver != "multichain" and cfg.n_chains > 1:
-            raise ValueError(
-                f"n_chains={cfg.n_chains} has no effect with "
-                f"driver={cfg.driver!r}; use driver='multichain'"
-            )
-        if cfg.sync not in ("staged", "fused"):
-            raise ValueError(f"sync={cfg.sync!r} not in ('staged', 'fused')")
-        if cfg.sync != "staged" and cfg.driver != "shardmap":
-            raise ValueError(
-                f"sync={cfg.sync!r} has no effect with "
-                f"driver={cfg.driver!r}; use driver='shardmap'"
-            )
-        if cfg.collapsed_backend not in COLLAPSED_BACKENDS:
-            raise ValueError(
-                f"collapsed_backend={cfg.collapsed_backend!r} not in "
-                f"{COLLAPSED_BACKENDS}"
-            )
-        if cfg.chol_refresh < 1:
-            raise ValueError(f"chol_refresh={cfg.chol_refresh} must be >= 1")
-        self.cfg = cfg
+        spec = as_spec(cfg)
+        self.spec = spec
+        self.cfg = spec  # back-compat alias: run knobs live on the spec
         self.hyp = hyp or IBPHypers()
-        N = (X.shape[0] // cfg.P) * cfg.P
-        self.X_global = np.asarray(X[:N], np.float32)
+        self.sampler = build_sampler(spec, self.hyp, X)
+        self.X_global = self.sampler.X_global
+        self.N = self.sampler.N
         self.X_eval = None if X_eval is None else jnp.asarray(X_eval)
-        self.Xs = jnp.asarray(
-            self.X_global.reshape(cfg.P, N // cfg.P, X.shape[1])
-        )
-        self.N = N
         self.history: list[dict[str, float]] = []
         # per-iteration scalar traces, one column per chain — the raw
         # material for split-R-hat / ESS in eval records
         self.trace: dict[str, list[np.ndarray]] = {"sigma_x": [], "K": []}
-        self._chain_axis = cfg.driver == "multichain"
-        self._build_backend()
-
-    # ---- backend selection -------------------------------------------------
-    def _build_backend(self) -> None:
-        """Install the backend hooks:
-
-        * ``_step(gs, st)`` / ``_stale(gs, st)`` — advance backend-NATIVE
-          state ``st`` (HybridShard for vmap/multichain; mesh-layout
-          buffers for shardmap, which stay device-resident across the
-          whole hot loop — conversion happens only at eval/ckpt cadence,
-          never per iteration).
-        * ``_to_native(ss)`` / ``_to_shard(st)`` — convert between the
-          canonical checkpoint layout and native state.
-        """
-        cfg = self.cfg
-        if cfg.driver in ("vmap", "multichain"):
-            it_fn = (hybrid_iteration_multichain if self._chain_axis
-                     else hybrid_iteration_vmap)
-            one = lambda fn, g, s: fn(self.Xs, g, s, self.hyp, L=cfg.L,
-                                      N_global=self.N, backend=cfg.backend,
-                                      collapsed_backend=cfg.collapsed_backend,
-                                      chol_refresh=cfg.chol_refresh)
-            self._step = lambda gs, ss: one(it_fn, gs, ss)
-            if self._chain_axis:
-                # built ONCE as jit(vmap(...)) — a bare vmap-of-jit would
-                # re-trace the full iteration body on every stale pass
-                self._stale = jax.jit(jax.vmap(
-                    lambda g, s: one(hybrid_stale_pass, g, s)))
-            else:
-                self._stale = lambda gs, ss: one(hybrid_stale_pass, gs, ss)
-            self._to_native = lambda ss: ss
-            self._to_shard = lambda ss: ss
-            return
-
-        # shardmap: the production collective path, P devices on a data mesh
-        from jax.sharding import NamedSharding
-        from jax.sharding import PartitionSpec as PS
-
-        from repro.compat import make_mesh
-
-        if cfg.P > jax.device_count():
-            raise ValueError(
-                f"driver='shardmap' needs P={cfg.P} devices, have "
-                f"{jax.device_count()} (use --xla_force_host_platform_"
-                f"device_count on CPU)"
-            )
-        mesh = make_mesh((cfg.P,), ("data",))
-        raw = make_hybrid_iteration_shardmap(
-            mesh, ("data",), self.hyp, L=cfg.L, N_global=self.N,
-            backend=cfg.backend, sync=cfg.sync,
-            collapsed_backend=cfg.collapsed_backend,
-            chol_refresh=cfg.chol_refresh,
-        )
-        raw_stale = (
-            make_hybrid_stale_pass_shardmap(
-                mesh, ("data",), L=cfg.L, N_global=self.N,
-                backend=cfg.backend,
-                collapsed_backend=cfg.collapsed_backend,
-                chol_refresh=cfg.chol_refresh,
-            ) if cfg.stale_sync > 0 else None
-        )
-        sh = NamedSharding(mesh, PS("data"))
-        Xf = jax.device_put(jnp.asarray(self.X_global), sh)
-
-        def to_native(ss: HybridShard):
-            P_, N_p, K = ss.Z.shape
-            Kt = ss.Z_tail.shape[-1]
-            return (
-                jax.device_put(ss.Z.reshape(self.N, K), sh),
-                jax.device_put(ss.Z_tail.reshape(self.N, Kt), sh),
-                jax.device_put(ss.tail_active, sh),
-            )
-
-        def to_shard(st) -> HybridShard:
-            Zf, Zt, ta = st
-            P_, N_p = cfg.P, self.N // cfg.P
-            return HybridShard(
-                Z=Zf.reshape(P_, N_p, Zf.shape[-1]),
-                Z_tail=Zt.reshape(P_, N_p, Zt.shape[-1]),
-                tail_active=ta,
-            )
-
-        def step_with(fn, gs, st):
-            gs2, Zf, Zt, ta = fn(Xf, gs, *st)
-            return gs2, (Zf, Zt, ta)
-
-        self._step = lambda gs, st: step_with(raw, gs, st)
-        self._stale = lambda gs, st: step_with(raw_stale, gs, st)
-        self._to_native = to_native
-        self._to_shard = to_shard
+        self._chain_axis = self.sampler.chain_axis
 
     # ---- state <-> checkpoint layout (global Z for elastic resharding) ----
-    def _init_state(self) -> tuple[HybridGlobal, HybridShard]:
-        cfg = self.cfg
-        kw = dict(
-            K_tail=cfg.K_tail, alpha=cfg.alpha, sigma_x=cfg.sigma_x,
-            sigma_a=cfg.sigma_a, K_init=cfg.K_init,
-        )
-        if self._chain_axis:
-            return init_multichain(
-                jax.random.key(cfg.seed), self.Xs, cfg.n_chains, cfg.K_max,
-                **kw,
-            )
-        return init_hybrid(jax.random.key(cfg.seed), self.Xs, cfg.K_max, **kw)
-
     def _to_ckpt(self, gs: HybridGlobal, ss: HybridShard) -> dict:
         # tail buffers are NOT serialized: checkpoints are written post-sync,
         # where tails are always cleared — _from_ckpt rebuilds them empty at
@@ -253,17 +155,17 @@ class MCMCDriver:
         }
 
     def _from_ckpt(self, blob: dict) -> tuple[HybridGlobal, HybridShard]:
-        cfg = self.cfg
+        spec = self.spec
         gs: HybridGlobal = blob["gs"]
         Zg = blob["Z_global"]
         K_ck = Zg.shape[-1]
-        if K_ck > cfg.K_max:
+        if K_ck > spec.K_max:
             raise ValueError(
-                f"checkpoint K_max={K_ck} exceeds configured {cfg.K_max}"
+                f"checkpoint K_max={K_ck} exceeds configured {spec.K_max}"
             )
-        if K_ck < cfg.K_max:
+        if K_ck < spec.K_max:
             # capacity-growth restart: pad the feature axis with empty slots
-            grow = cfg.K_max - K_ck
+            grow = spec.K_max - K_ck
             Zg = _pad_trailing(Zg, -1, grow)
             gs = dataclasses.replace(
                 gs,
@@ -279,93 +181,96 @@ class MCMCDriver:
         if N != self.N:
             raise ValueError(
                 f"checkpoint has N={N} observations but this driver "
-                f"truncated the data to N={self.N} (P={cfg.P}); pick a P "
+                f"truncated the data to N={self.N} (P={spec.P}); pick a P "
                 f"that keeps N={N}"
             )
         # chain-axis compatibility is checked loudly: a single-chain
         # checkpoint must not silently restore under a chain-batched
         # template (or vice versa), and the chain count is part of the
-        # state — n_chains cannot change across a restart
+        # state — n_chains cannot change across a restart (the layout of
+        # the chain axis CAN: multichain <-> mesh restores are legal)
         if self._chain_axis:
-            if not lead or lead[0] != cfg.n_chains:
+            if not lead or lead[0] != spec.n_chains:
                 raise ValueError(
                     f"checkpoint chain axis {lead or 'absent'} does not "
-                    f"match configured n_chains={cfg.n_chains}"
+                    f"match configured n_chains={spec.n_chains}"
                 )
         elif lead:
             raise ValueError(
                 f"checkpoint carries a chain axis {lead}; restore it with "
-                f"driver='multichain' and n_chains={lead[0]}"
+                f"driver='multichain'/'mesh' and n_chains={lead[0]}"
             )
-        P = cfg.P
+        P = spec.P
         # tails are cleared at every master sync, and checkpoints are only
         # written post-sync — so tail buffers are rebuilt EMPTY at the
         # CONFIGURED K_tail (a restart may widen/narrow tail exploration;
         # the checkpoint's tail width does not pin it)
         ss = HybridShard(
             Z=Zg.reshape(*lead, P, N // P, K),
-            Z_tail=jnp.zeros((*lead, P, N // P, cfg.K_tail), Zg.dtype),
-            tail_active=jnp.zeros((*lead, P, cfg.K_tail), Zg.dtype),
+            Z_tail=jnp.zeros((*lead, P, N // P, spec.K_tail), Zg.dtype),
+            tail_active=jnp.zeros((*lead, P, spec.K_tail), Zg.dtype),
         )
         return gs, ss
 
     def _template(self):
-        gs, ss = self._init_state()
-        return self._to_ckpt(gs, ss)
+        gs, st = self.sampler.init()
+        return self._to_ckpt(gs, self.sampler.to_canonical(st))
 
     # ---- main loop --------------------------------------------------------
     def run(self, n_iters: int | None = None,
             on_eval: Callable[[dict], None] | None = None,
             crash_at: int | None = None):
         """Main loop. ``crash_at`` raises mid-run (for restart tests)."""
-        cfg = self.cfg
-        n_iters = n_iters or cfg.n_iters
-        restored = restore(cfg.ckpt_dir, self._template())
+        spec = self.spec
+        sampler = self.sampler
+        n_iters = n_iters or spec.n_iters
+        restored = restore(spec.ckpt_dir, self._template())
         if restored is not None:
             blob, start = restored[0], int(restored[1])
             gs, ss = self._from_ckpt(blob)
+            st = sampler.from_canonical(ss)  # native, device-resident
         else:
             start = 0
-            gs, ss = self._init_state()
+            gs, st = sampler.init(jax.random.key(spec.seed))
 
         t0 = time.time()
-        st = self._to_native(ss)  # backend-native state, device-resident
         for it in range(start, n_iters):
             if crash_at is not None and it == crash_at:
                 raise RuntimeError(f"injected crash at iteration {it}")
-            for _ in range(cfg.stale_sync):
-                gs, st = self._stale(gs, st)
-            gs, st = self._step(gs, st)
+            for _ in range(spec.stale_sync):
+                gs, st = sampler.stale(gs, st)
+            gs, st = sampler.step(gs, st)
             self._record_trace(gs)
             last = it == n_iters - 1
-            need_eval = (it + 1) % cfg.eval_every == 0 or last
-            need_ckpt = (it + 1) % cfg.ckpt_every == 0 or last
+            need_eval = (it + 1) % spec.eval_every == 0 or last
+            need_ckpt = (it + 1) % spec.ckpt_every == 0 or last
             # pulling gs.overflow blocks the host on the iteration's whole
             # computation, so check at a bounded cadence, not every step —
             # detection delay is <= overflow_every iterations (DESIGN.md §10)
             overflowed = (
                 need_eval or need_ckpt
-                or (it + 1) % cfg.overflow_every == 0
+                or (it + 1) % spec.overflow_every == 0
             ) and int(jnp.max(gs.overflow)) > 0
             if need_eval or need_ckpt or overflowed:
                 # canonical layout is materialized at cadence only — the
-                # hot loop never leaves the backend's native layout
-                ss = self._to_shard(st)
+                # hot loop never leaves the layout's native state
+                ss = sampler.to_canonical(st)
             if need_eval:
                 rec = self.evaluate(gs, ss, it + 1, time.time() - t0)
                 self.history.append(rec)
                 if on_eval:
                     on_eval(rec)
             if need_ckpt:
-                save_pytree(cfg.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
+                save_pytree(spec.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
             if overflowed:
                 # capacity growth: checkpoint + restart with larger K_max
                 if not need_ckpt:
-                    save_pytree(cfg.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
+                    save_pytree(spec.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
                 raise RuntimeError(
-                    f"K_max={cfg.K_max} overflow at it={it}; restart with 2x K_max"
+                    f"K_max={spec.K_max} overflow at it={it}; restart with "
+                    f"2x K_max"
                 )
-        return gs, self._to_shard(st)
+        return gs, sampler.to_canonical(st)
 
     # ---- diagnostics ------------------------------------------------------
     def _record_trace(self, gs: HybridGlobal) -> None:

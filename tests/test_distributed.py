@@ -24,26 +24,16 @@ def run_with_devices(code: str, n_devices: int = 8) -> str:
 
 def test_shardmap_hybrid_runs_and_converges():
     out = run_with_devices("""
-        import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding
-        from repro.compat import AxisType, make_mesh, set_mesh
-        from repro.data import cambridge_data, shard_rows
-        from repro.core.ibp import IBPHypers, init_hybrid, make_hybrid_iteration_shardmap
+        import jax
+        from repro.data import cambridge_data
+        from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
         X, _, _ = cambridge_data(N=96, seed=1)
-        Pn = 8
-        mesh = make_mesh((Pn,), ('data',), axis_types=(AxisType.Auto,))
-        Xs = jnp.asarray(shard_rows(X, Pn))
-        gs, ss = init_hybrid(jax.random.key(1), Xs, K_max=16, K_tail=6, K_init=4)
-        step = make_hybrid_iteration_shardmap(mesh, ('data',), IBPHypers(),
-                                              L=5, N_global=96)
-        with set_mesh(mesh):
-            sh = NamedSharding(mesh, P('data'))
-            Xf = jax.device_put(Xs.reshape(-1, 36), sh)
-            Zf = jax.device_put(ss.Z.reshape(-1, 16), sh)
-            Zt = jax.device_put(ss.Z_tail.reshape(-1, 6), sh)
-            ta = jax.device_put(ss.tail_active, sh)
-            for _ in range(40):
-                gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)
+        spec = SamplerSpec(P=8, K_max=16, K_tail=6, K_init=4, L=5,
+                           data='shardmap')
+        s = build_sampler(spec, IBPHypers(), X)
+        gs, st = s.init(jax.random.key(1))
+        for _ in range(40):
+            gs, st = s.step(gs, st)
         K = int(gs.active.sum()); sx = float(gs.sigma_x)
         assert 3 <= K <= 9, K
         assert 0.3 <= sx <= 0.75, sx
@@ -53,41 +43,27 @@ def test_shardmap_hybrid_runs_and_converges():
 
 
 def test_shardmap_matches_vmap_semantics():
-    """The shard_map driver and the vmap driver produce identical states under
-    identical keys (they implement the same algorithm)."""
+    """The shard_map layout and the vmap layout produce identical states
+    under identical keys (they implement the same algorithm), starting
+    from the same canonical state."""
     out = run_with_devices("""
-        import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding
-        from repro.compat import AxisType, make_mesh, set_mesh
-        from repro.data import cambridge_data, shard_rows
-        from repro.core.ibp import (IBPHypers, init_hybrid,
-                                    hybrid_iteration_vmap,
-                                    make_hybrid_iteration_shardmap)
+        import numpy as np, jax
+        from repro.data import cambridge_data
+        from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
         X, _, _ = cambridge_data(N=32, seed=4)
-        Pn = 4
         hyp = IBPHypers()
-        Xs = jnp.asarray(shard_rows(X, Pn))
-        gs_v, ss_v = init_hybrid(jax.random.key(2), Xs, K_max=12, K_tail=4,
-                                 K_init=3)
-        gs_s, ss_s = gs_v, ss_v
-        # vmap path
+        spec = SamplerSpec(P=4, K_max=12, K_tail=4, K_init=3, L=2)
+        sv = build_sampler(spec, hyp, X)
+        sm = build_sampler(spec.replace(data='shardmap'), hyp, X)
+        gs_v, st_v = sv.init(jax.random.key(2))
+        gs_s = gs_v
+        st_s = sm.from_canonical(sv.to_canonical(st_v))
         for _ in range(5):
-            gs_v, ss_v = hybrid_iteration_vmap(Xs, gs_v, ss_v, hyp, L=2,
-                                               N_global=32)
-        # shard_map path
-        mesh = make_mesh((Pn,), ('data',), axis_types=(AxisType.Auto,))
-        step = make_hybrid_iteration_shardmap(mesh, ('data',), hyp, L=2,
-                                              N_global=32)
-        with set_mesh(mesh):
-            sh = NamedSharding(mesh, P('data'))
-            Xf = jax.device_put(Xs.reshape(-1, 36), sh)
-            Zf = jax.device_put(ss_s.Z.reshape(-1, 12), sh)
-            Zt = jax.device_put(ss_s.Z_tail.reshape(-1, 4), sh)
-            ta = jax.device_put(ss_s.tail_active, sh)
-            for _ in range(5):
-                gs_s, Zf, Zt, ta = step(Xf, gs_s, Zf, Zt, ta)
+            gs_v, st_v = sv.step(gs_v, st_v)
+            gs_s, st_s = sm.step(gs_s, st_s)
         np.testing.assert_array_equal(
-            np.asarray(ss_v.Z.reshape(-1, 12)), np.asarray(Zf))
+            np.asarray(sv.to_canonical(st_v).Z),
+            np.asarray(sm.to_canonical(st_s).Z))
         # float scalars agree up to reduction-ordering ULPs (psum vs axis-sum)
         np.testing.assert_allclose(float(gs_v.sigma_x), float(gs_s.sigma_x),
                                    rtol=1e-5)
@@ -106,33 +82,21 @@ def test_fused_sync_matches_staged():
     tail mask folded into the stats payload) computes the same iteration as
     the staged 3-all-reduce schedule, up to reduction-order ULPs."""
     out = run_with_devices("""
-        import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import PartitionSpec as P, NamedSharding
-        from repro.compat import AxisType, make_mesh, set_mesh
-        from repro.data import cambridge_data, shard_rows
-        from repro.core.ibp import (IBPHypers, init_hybrid,
-                                    make_hybrid_iteration_shardmap)
+        import numpy as np, jax
+        from repro.data import cambridge_data
+        from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
         X, _, _ = cambridge_data(N=64, seed=9)
-        Pn, Km, Kt = 4, 12, 4
         hyp = IBPHypers()
-        Xs = jnp.asarray(shard_rows(X, Pn))
-        mesh = make_mesh((Pn,), ('data',), axis_types=(AxisType.Auto,))
         outs = {}
         for sync in ('staged', 'fused'):
-            gs, ss = init_hybrid(jax.random.key(3), Xs, Km, K_tail=Kt,
-                                 K_init=3)
-            step = make_hybrid_iteration_shardmap(mesh, ('data',), hyp, L=2,
-                                                  N_global=64, sync=sync)
-            with set_mesh(mesh):
-                sh = NamedSharding(mesh, P('data'))
-                Xf = jax.device_put(Xs.reshape(-1, 36), sh)
-                Zf = jax.device_put(ss.Z.reshape(-1, Km), sh)
-                Zt = jax.device_put(ss.Z_tail.reshape(-1, Kt), sh)
-                ta = jax.device_put(ss.tail_active, sh)
-                for _ in range(3):
-                    gs, Zf, Zt, ta = step(Xf, gs, Zf, Zt, ta)
-                    jax.block_until_ready(Zf)
-            outs[sync] = (np.asarray(Zf), np.asarray(gs.A),
+            spec = SamplerSpec(P=4, K_max=12, K_tail=4, K_init=3, L=2,
+                               data='shardmap', sync=sync)
+            s = build_sampler(spec, hyp, X)
+            gs, st = s.init(jax.random.key(3))
+            for _ in range(3):
+                gs, st = s.step(gs, st)
+                jax.block_until_ready(st[0])
+            outs[sync] = (np.asarray(st[0]), np.asarray(gs.A),
                           float(gs.sigma_x), np.asarray(gs.active))
         np.testing.assert_array_equal(outs['staged'][0], outs['fused'][0])
         np.testing.assert_allclose(outs['staged'][1], outs['fused'][1],

@@ -69,12 +69,12 @@ def test_stale_pass_key_advance_distinct_from_consumed_stream(data):
     """Regression pin: the key a stale pass hands forward (fold 14) must
     differ from the key its sweeps consumed (fold 13) — otherwise the next
     iteration's sub-iterations replay the same per-(shard, l) uniforms."""
-    from repro.core.ibp import hybrid_stale_pass, init_hybrid
-    from repro.data import shard_rows
+    from repro.core.ibp import SamplerSpec, build_sampler
 
-    Xs = jnp.asarray(shard_rows(data, 3))
-    gs, ss = init_hybrid(jax.random.key(0), Xs, 12, K_tail=6, K_init=3)
-    gs2, _ = hybrid_stale_pass(Xs, gs, ss, IBPHypers(), L=2, N_global=48)
+    s = build_sampler(SamplerSpec(P=3, K_max=12, K_tail=6, K_init=3, L=2),
+                      IBPHypers(), data)
+    gs, st = s.init(jax.random.key(0))
+    gs2, _ = s.stale(gs, st)
     kd = lambda k: np.asarray(jax.random.key_data(k))
     assert not np.array_equal(kd(gs2.key),
                               kd(jax.random.fold_in(gs.key, 13)))
@@ -85,23 +85,17 @@ def test_stale_pass_key_advance_distinct_from_consumed_stream(data):
 def test_stale_pass_shardmap_matches_vmap(data):
     """The collective-free shard_map stale pass is bitwise-equivalent to
     the vmap stale pass (P=1 mesh runs in-process on one device)."""
-    from repro.core.ibp import (hybrid_stale_pass, init_hybrid,
-                                make_hybrid_stale_pass_shardmap)
-    from repro.compat import make_mesh
-    from repro.data import shard_rows
+    from repro.core.ibp import SamplerSpec, build_sampler
 
-    N_, K, Kt = 48, 12, 6
-    Xs = jnp.asarray(shard_rows(data, 1))
-    gs, ss = init_hybrid(jax.random.key(4), Xs, K, K_tail=Kt, K_init=3)
-    gs_v, ss_v = hybrid_stale_pass(Xs, gs, ss, IBPHypers(), L=2,
-                                   N_global=N_)
-    mesh = make_mesh((1,), ("data",))
-    stale = make_hybrid_stale_pass_shardmap(mesh, ("data",), L=2,
-                                            N_global=N_)
-    gs_s, Zf, Zt, ta = stale(Xs.reshape(N_, -1), gs, ss.Z.reshape(N_, K),
-                             ss.Z_tail.reshape(N_, Kt), ss.tail_active)
-    np.testing.assert_array_equal(np.asarray(ss_v.Z.reshape(N_, K)),
-                                  np.asarray(Zf))
+    spec = SamplerSpec(P=1, K_max=12, K_tail=6, K_init=3, L=2)
+    sv = build_sampler(spec, IBPHypers(), data)
+    sm = build_sampler(spec.replace(data="shardmap"), IBPHypers(), data)
+    gs, st_v = sv.init(jax.random.key(4))
+    st_m = sm.from_canonical(sv.to_canonical(st_v))  # identical start
+    gs_v, ss_v = sv.stale(gs, st_v)
+    gs_s, ss_s = sm.stale(gs, st_m)
+    np.testing.assert_array_equal(np.asarray(sv.to_canonical(ss_v).Z),
+                                  np.asarray(sm.to_canonical(ss_s).Z))
     np.testing.assert_array_equal(
         np.asarray(jax.random.key_data(gs_v.key)),
         np.asarray(jax.random.key_data(gs_s.key)))

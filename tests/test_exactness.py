@@ -6,7 +6,7 @@ Statistical design (DESIGN.md §11) — no hard single-chain tolerances:
 
 * posterior summaries are compared via MCSE/ESS-aware z-scores
   (``convergence.mean_diff_z``), with the hybrid side pooled over C=4
-  VECTORIZED chains (``hybrid_iteration_multichain``) so between-chain
+  VECTORIZED chains (``chains="vmap"`` sampler layout) so between-chain
   variance is measured, not guessed;
 * the joint-ll comparison is draw-vs-draw: the collapsed chain DRAWS
   A ~ p(A|Z,X) and pi ~ Beta(m, 1+N-m) exactly as the hybrid master
@@ -34,17 +34,17 @@ import pytest
 
 from repro.core.ibp import (
     IBPHypers,
+    SamplerSpec,
+    build_hybrid_fns,
+    build_sampler,
     collapsed_sweep,
-    hybrid_iteration_multichain,
-    hybrid_iteration_vmap,
     init_hybrid,
-    init_multichain,
     init_state,
 )
 from repro.core.ibp import convergence as cv
 from repro.core.ibp.diagnostics import train_joint_loglik
 from repro.core.ibp import math as ibm
-from repro.data import cambridge_data, shard_rows
+from repro.data import cambridge_data
 
 N, D, K_MAX = 72, 36, 12
 C_CHAINS = 4
@@ -96,18 +96,19 @@ def collapsed_chain(data):
 @pytest.fixture(scope="module")
 def hybrid_chains(data):
     """C=4 vectorized hybrid chains; (C, T) traces of K, sigma_x, ll."""
-    P = 3
-    Xs = jnp.asarray(shard_rows(data, P))
     X = jnp.asarray(data)
     hyp = IBPHypers()
-    gs, ss = init_multichain(jax.random.key(2), Xs, C_CHAINS, K_MAX,
-                             K_tail=6, K_init=3)
+    smp = build_sampler(
+        SamplerSpec(P=3, K_max=K_MAX, K_tail=6, K_init=3, L=5,
+                    chains="vmap", n_chains=C_CHAINS),
+        hyp, data,
+    )
+    gs, ss = smp.init(jax.random.key(2))
     ll_fn = jax.jit(jax.vmap(train_joint_loglik,
                              in_axes=(None, 0, 0, 0, 0, 0)))
     Ks, sxs, lls = [], [], []
     for it in range(BURN + KEEP):
-        gs, ss = hybrid_iteration_multichain(Xs, gs, ss, hyp, L=5,
-                                             N_global=N)
+        gs, ss = smp.step(gs, ss)
         if it >= BURN and (it - BURN) % THIN == 0:
             Ks.append(np.asarray(jnp.sum(gs.active, axis=-1)))
             sxs.append(np.asarray(gs.sigma_x))
@@ -201,9 +202,15 @@ def geweke_hybrid():
                          alpha=GW_ALPHA, sigma_x=GW_SX, sigma_a=GW_SA,
                          K_init=4, init_from_data=False)
     hyp = _gw_hyp()
+    # X is REGENERATED between transitions, so the step comes from the
+    # low-level constructor (a Sampler closes over fixed data)
+    step = build_hybrid_fns(
+        SamplerSpec(P=P, K_max=GW_KMAX, K_tail=GW_KMAX, L=3),
+        hyp, N_global=GW_N,
+    ).step
     Ks, ms = [], []
     for it in range(GW_ITERS):
-        gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=3, N_global=GW_N)
+        gs, ss = step(Xs, gs, ss)
         key, ke = jax.random.split(key)
         mean = (ss.Z * gs.active[None, None, :]) @ gs.A
         Xs = mean + gs.sigma_x * jax.random.normal(ke, mean.shape)

@@ -8,14 +8,14 @@ import pytest
 
 from repro.core.ibp import (
     IBPHypers,
+    SamplerSpec,
+    build_sampler,
     collapsed_sweep,
-    hybrid_iteration_vmap,
-    init_hybrid,
     init_state,
     uncollapsed_step,
 )
 from repro.core.ibp.diagnostics import match_features
-from repro.data import cambridge_data, shard_rows
+from repro.data import cambridge_data
 
 
 @pytest.fixture(scope="module")
@@ -45,12 +45,11 @@ def test_collapsed_recovers_features(data):
 
 def test_hybrid_recovers_features(data):
     X, _, Atrue = data
-    hyp = IBPHypers()
-    Xs = jnp.asarray(shard_rows(np.asarray(X), 4))
-    gs, ss = init_hybrid(jax.random.key(1), Xs, K_max=16, K_tail=6, K_init=4)
+    s = build_sampler(SamplerSpec(P=4, K_max=16, K_tail=6, K_init=4, L=5),
+                      IBPHypers(), np.asarray(X))
+    gs, ss = s.init(jax.random.key(1))
     for _ in range(80):
-        gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=5,
-                                       N_global=X.shape[0])
+        gs, ss = s.step(gs, ss)
     K = int(gs.active.sum())
     assert 3 <= K <= 9, K
     assert 0.3 <= float(gs.sigma_x) <= 0.6
@@ -91,11 +90,12 @@ def test_hybrid_matches_collapsed_posterior_stats():
             csx.append(float(st.sigma_x))
 
     # hybrid chain (P=3)
-    Xs = jnp.asarray(shard_rows(X, 3))
-    gs, ss = init_hybrid(jax.random.key(1), Xs, K_max=12, K_tail=6, K_init=4)
+    s = build_sampler(SamplerSpec(P=3, K_max=12, K_tail=6, K_init=4, L=5),
+                      hyp, X)
+    gs, ss = s.init(jax.random.key(1))
     hK, hsx = [], []
     for i in range(150):
-        gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=5, N_global=60)
+        gs, ss = s.step(gs, ss)
         if i >= 50:
             hK.append(float(gs.active.sum()))
             hsx.append(float(gs.sigma_x))
@@ -108,11 +108,11 @@ def test_hybrid_matches_collapsed_posterior_stats():
 def test_hybrid_single_processor_runs():
     """P=1 degenerate case (the paper reports P=1 beats collapsed on speed)."""
     X, _, _ = cambridge_data(N=40, seed=9)
-    Xs = jnp.asarray(shard_rows(X, 1))
-    hyp = IBPHypers()
-    gs, ss = init_hybrid(jax.random.key(0), Xs, K_max=12, K_tail=6, K_init=4)
+    s = build_sampler(SamplerSpec(P=1, K_max=12, K_tail=6, K_init=4, L=5),
+                      IBPHypers(), X)
+    gs, ss = s.init(jax.random.key(0))
     for _ in range(30):
-        gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=5, N_global=40)
+        gs, ss = s.step(gs, ss)
     assert int(gs.active.sum()) >= 1
     assert np.isfinite(float(gs.sigma_x))
 
@@ -121,15 +121,16 @@ def test_hybrid_pallas_backend_matches_jnp_statistically():
     """The Pallas gibbs_flip backend drives the sampler to the same posterior
     region (identical contract, different uniforms consumption order)."""
     X, _, _ = cambridge_data(N=48, seed=11)
-    Xs = jnp.asarray(shard_rows(X, 2))
-    hyp = IBPHypers()
     outs = {}
     for backend in ("jnp", "pallas"):
-        gs, ss = init_hybrid(jax.random.key(3), Xs, K_max=12, K_tail=6,
-                             K_init=4)
+        s = build_sampler(
+            SamplerSpec(P=2, K_max=12, K_tail=6, K_init=4, L=3,
+                        backend=backend),
+            IBPHypers(), X,
+        )
+        gs, ss = s.init(jax.random.key(3))
         for _ in range(40):
-            gs, ss = hybrid_iteration_vmap(Xs, gs, ss, hyp, L=3, N_global=48,
-                                           backend=backend)
+            gs, ss = s.step(gs, ss)
         outs[backend] = (int(gs.active.sum()), float(gs.sigma_x))
     assert abs(outs["jnp"][0] - outs["pallas"][0]) <= 2
     assert abs(outs["jnp"][1] - outs["pallas"][1]) < 0.15
