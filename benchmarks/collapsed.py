@@ -1,16 +1,23 @@
 """Collapsed-sampler perf trajectory: the numbers behind BENCH_<date>.json.
 
-Three measurements (ISSUE 2 / DESIGN.md §12):
+Four measurements (ISSUE 2, 4 / DESIGN.md §12, §14):
 
 * ``bench_collapsed``  — full collapsed sweep rows/s, ref (fresh O(K^3)
   factorization per row, the seed path) vs fast (rank-one Cholesky carry),
-  at K_max ∈ {16, 32, 64}. The speedup column is the PR's headline number;
+  at K_max ∈ {16, 32, 64}. The speedup column is the PR-2 headline number;
   the ref/fast equivalence test (tests/test_collapsed_fast.py) certifies
   it is not bought with approximation.
+* ``bench_occupancy`` — the occupancy-adaptive packing trajectory: fast
+  sweep rows/s, unpacked (k_live_buckets="off", every dense op at the
+  K_max pad) vs packed (K_live bucket + carried G = HH^T), at fixed
+  K_max with planted K_plus ∈ {4, 8, 16, 32, 56} live features. The
+  ``packed_speedup`` column at K_plus=8 is the PR-4 headline number and
+  the CI ``bench-smoke`` gate (packed >= 1.5x unpacked there).
 * ``bench_uncollapsed`` — uncollapsed sweep rows/s per backend (jnp vs
-  pallas). On CPU the Pallas kernel executes in interpret mode, so its
-  number measures validation overhead, not TPU speed — flagged in the
-  payload.
+  pallas), at the SAME row count for both backends so the comparison is
+  apples-to-apples. On CPU the Pallas kernel executes in interpret mode
+  (flagged in the payload), so both backends run at the interpret-sized
+  row count there; on TPU both run at full N.
 * ``bench_hybrid_sync`` — full hybrid iteration wall time, staged vs fused
   master sync, on P forced host devices in a subprocess (same pattern as
   benchmarks/scaling.py; shared-core, so it measures collective count
@@ -29,21 +36,23 @@ from benchmarks._hostdev import run_hostdev_json
 
 
 def _sweep_time(backend: str, X, K_max: int, refresh: int, iters: int,
-                warm: int) -> tuple[float, int]:
+                warm: int, k_live: str = "off",
+                K_init: int = 8) -> tuple[float, int]:
     from repro.core.ibp import IBPHypers, collapsed_sweep
     from repro.core.ibp.state import init_state
 
     hyp = IBPHypers()
     N = X.shape[0]
-    st = init_state(jax.random.key(0), N, X.shape[1], K_max=K_max, K_init=8)
+    st = init_state(jax.random.key(0), N, X.shape[1], K_max=K_max,
+                    K_init=K_init)
     for _ in range(warm):
         st = collapsed_sweep(st, X, hyp, backend=backend,
-                             refresh_every=refresh)
+                             refresh_every=refresh, k_live_buckets=k_live)
     jax.block_until_ready(st.Z)
     t0 = time.time()
     for _ in range(iters):
         st = collapsed_sweep(st, X, hyp, backend=backend,
-                             refresh_every=refresh)
+                             refresh_every=refresh, k_live_buckets=k_live)
     jax.block_until_ready(st.Z)
     return (time.time() - t0) / iters, int(st.active.sum())
 
@@ -81,23 +90,107 @@ def bench_collapsed(N: int, D: int, Ks, refresh: int, iters: int,
     return out
 
 
+def _occ_case(N: int, D: int, K_max: int, kp: int):
+    """Planted K_plus-feature data + a state STARTED AT the planted
+    assignment, so the chain sits at the posterior mode and occupancy
+    stays pinned near K_plus (a cold start would birth its way to a much
+    larger K⁺ while fitting, defeating the low-occupancy measurement)."""
+    import dataclasses
+
+    from repro.core.ibp.state import init_state
+
+    rng = np.random.default_rng(kp)
+    Zt = (rng.random((N, kp)) < 0.5).astype(np.float32)
+    Zt[:, 0] = 1.0  # no dead planted columns
+    At = rng.standard_normal((kp, D)).astype(np.float32) * 2.0
+    X = jnp.asarray(Zt @ At + 0.3 * rng.standard_normal(
+        (N, D)).astype(np.float32))
+    st = init_state(jax.random.key(0), N, D, K_max=K_max, K_init=kp,
+                    alpha=0.5)
+    Z0 = jnp.zeros((N, K_max), jnp.float32).at[:, :kp].set(jnp.asarray(Zt))
+    return X, dataclasses.replace(st, Z=Z0)
+
+
+def _occ_sweep_time(X, st0, refresh: int, iters: int, warm: int,
+                    k_live: str) -> tuple[float, int]:
+    from repro.core.ibp import IBPHypers, collapsed_sweep
+
+    hyp = IBPHypers(resample_alpha=False)  # pinned small alpha: rare births
+    st = st0
+    for _ in range(warm):
+        st = collapsed_sweep(st, X, hyp, backend="fast",
+                             refresh_every=refresh, k_live_buckets=k_live)
+    jax.block_until_ready(st.Z)
+    t0 = time.time()
+    for _ in range(iters):
+        st = collapsed_sweep(st, X, hyp, backend="fast",
+                             refresh_every=refresh, k_live_buckets=k_live)
+    jax.block_until_ready(st.Z)
+    return (time.time() - t0) / iters, int(st.active.sum())
+
+
+def bench_occupancy(N: int, D: int, K_max: int, kplus_list, refresh: int,
+                    iters: int, warm: int, repeats: int = 2) -> list[dict]:
+    """Packed vs unpacked fast sweep rows/s across occupancy (DESIGN.md §14).
+
+    The data is PLANTED with K_plus well-separated features and the
+    chain starts AT the planted assignment, so occupancy stays pinned
+    near the target while K_max provides the fixed pad — exactly the
+    low-occupancy regime (K_plus << K_max) the packing targets. The
+    achieved post-warmup K_plus is recorded next to the target.
+    """
+    out = []
+    for kp in kplus_list:
+        X, st0 = _occ_case(N, D, K_max, kp)
+        # interleave the two variants across repeats (min of each): a
+        # machine-load drift then biases both sides equally instead of
+        # whichever variant ran last
+        t_off = t_on = float("inf")
+        k_plus = 0
+        for _ in range(repeats):
+            t_off = min(t_off,
+                        _occ_sweep_time(X, st0, refresh, iters, warm,
+                                        "off")[0])
+            t, k = _occ_sweep_time(X, st0, refresh, iters, warm, "on")
+            if t < t_on:
+                t_on, k_plus = t, k
+        out.append({
+            "K_max": K_max,
+            "K_plus_target": kp,
+            "K_plus": k_plus,
+            "unpacked_rows_per_s": N / t_off,
+            "packed_rows_per_s": N / t_on,
+            "unpacked_ms_per_sweep": t_off * 1e3,
+            "packed_ms_per_sweep": t_on * 1e3,
+            "packed_speedup": t_off / t_on,
+        })
+    return out
+
+
 def bench_uncollapsed(N: int, D: int, K: int, iters: int,
                       pallas_rows: int = 128) -> list[dict]:
-    """rows/s of one uncollapsed Z sweep per backend."""
+    """rows/s of one uncollapsed Z sweep per backend, SAME rows for both.
+
+    On CPU the Pallas kernel runs in interpret mode (Python per grid
+    cell), so both backends are timed at the interpret-sized row count —
+    comparable rows/s, at the price of under-utilizing the jnp path. On
+    TPU both run at the full N.
+    """
     from repro.core.ibp.sweeps import uncollapsed_sweep
 
     rng = np.random.default_rng(0)
     A = jnp.asarray(rng.standard_normal((K, D)), jnp.float32)
     pi = jnp.full((K,), 0.3, jnp.float32)
     act = jnp.ones((K,), jnp.float32)
+    interpreted = jax.default_backend() != "tpu"
+    n = min(N, pallas_rows) if interpreted else N
+    X = jnp.asarray(rng.standard_normal((n, D)), jnp.float32)
+    Z0 = jnp.asarray((rng.random((n, K)) < 0.3), jnp.float32)
     out = []
     for backend in ("jnp", "pallas"):
-        n = N if backend == "jnp" else min(N, pallas_rows)  # interpret is slow
-        X = jnp.asarray(rng.standard_normal((n, D)), jnp.float32)
-        Z = jnp.asarray((rng.random((n, K)) < 0.3), jnp.float32)
-        f = jax.jit(lambda Z, k, be=backend, X=X: uncollapsed_sweep(
+        f = jax.jit(lambda Z, k, be=backend: uncollapsed_sweep(
             X, Z, A, pi, act, jnp.float32(1.0), k, backend=be))
-        Z2 = jax.block_until_ready(f(Z, jax.random.key(0)))
+        Z2 = jax.block_until_ready(f(Z0, jax.random.key(0)))
         t0 = time.time()
         for i in range(iters):
             Z2 = f(Z2, jax.random.key(i))
@@ -107,8 +200,7 @@ def bench_uncollapsed(N: int, D: int, K: int, iters: int,
             "backend": backend,
             "rows": n,
             "rows_per_s": n / dt,
-            "interpreted": backend == "pallas"
-            and jax.default_backend() != "tpu",
+            "interpreted": backend == "pallas" and interpreted,
         })
     return out
 
@@ -154,6 +246,26 @@ def main(argv=None) -> tuple[list[str], dict]:
     ap.add_argument("--repeats", type=int, default=3,
                     help="take the min over this many timing repeats "
                          "(shared-CPU noise floor)")
+    ap.add_argument("--occ-K-max", type=int, default=64,
+                    help="fixed K_max pad of the occupancy sweep")
+    ap.add_argument("--occ-Kplus", type=int, nargs="+",
+                    default=[4, 8, 16, 32, 56],
+                    help="planted live-feature counts of the occupancy "
+                         "sweep (packed vs unpacked fast)")
+    ap.add_argument("--occ-N", type=int, default=None,
+                    help="occupancy-sweep rows (default: --N). Unlike the "
+                         "ref-vs-fast section there is no O(K^3) path "
+                         "here, so smoke can afford real sizes — tiny "
+                         "sweeps drown the packed win in per-sweep "
+                         "dispatch overhead")
+    ap.add_argument("--occ-D", type=int, default=None,
+                    help="occupancy-sweep feature dim (default: --D)")
+    ap.add_argument("--occ-iters", type=int, default=None,
+                    help="occupancy-sweep timed sweeps per repeat "
+                         "(default: --iters); the packed-vs-unpacked "
+                         "ratio gates CI, so it gets enough sweeps to "
+                         "sit at steady state even in smoke")
+    ap.add_argument("--skip-occupancy", action="store_true")
     ap.add_argument("--skip-hybrid-sync", action="store_true")
     ap.add_argument("--P", type=int, default=4)
     args = ap.parse_args(argv)
@@ -174,6 +286,26 @@ def main(argv=None) -> tuple[list[str], dict]:
             f"ref_ms={r['ref_ms_per_sweep']:.1f};speedup={r['speedup']:.2f}x"
         )
         print(csv[-1], flush=True)
+
+    if not args.skip_occupancy:
+        occ_N = args.occ_N or args.N
+        occ_D = args.occ_D or args.D
+        occ_iters = args.occ_iters or args.iters
+        payload["occupancy_sweep"] = {
+            "N": occ_N, "D": occ_D, "refresh_every": args.refresh,
+            "results": bench_occupancy(occ_N, occ_D, args.occ_K_max,
+                                       args.occ_Kplus, args.refresh,
+                                       occ_iters, args.warm,
+                                       repeats=args.repeats),
+        }
+        for r in payload["occupancy_sweep"]["results"]:
+            csv.append(
+                f"occupancy_sweep__K{r['K_max']}_Kp{r['K_plus_target']},"
+                f"{r['packed_ms_per_sweep'] * 1e3:.0f},"
+                f"unpacked_ms={r['unpacked_ms_per_sweep']:.1f};"
+                f"packed_speedup={r['packed_speedup']:.2f}x"
+            )
+            print(csv[-1], flush=True)
 
     payload["uncollapsed_sweep"] = {
         "D": args.D, "K": max(args.Ks),

@@ -151,7 +151,15 @@ def bench_gaussian_sse(N, K, D):
     return t_ref, flops / bytes_
 
 
-def main(argv=None):
+def main(argv=None) -> tuple[list[str], list[dict]]:
+    """Returns (csv_lines, results).
+
+    ``results`` is the machine-readable form that lands in
+    ``BENCH_*.json["kernels"]``: one JSON object per kernel with
+    ``name``, ``us`` (jnp-reference wall time), ``allclose``,
+    ``arith_intensity`` and a structured ``shape`` — replacing the old
+    packed comma-string so the perf trajectory is machine-diffable.
+    """
     ap = argparse.ArgumentParser()
     ap.add_argument("--N", type=int, default=4096)
     ap.add_argument("--K", type=int, default=64)
@@ -159,11 +167,19 @@ def main(argv=None):
     args = ap.parse_args(argv)
     N, K, D = args.N, args.K, args.D
 
-    lines = []
+    lines: list[str] = []
+    results: list[dict] = []
     for name, fn in [("gibbs_flip", bench_gibbs_flip),
                      ("feature_stats", bench_feature_stats),
                      ("gaussian_sse", bench_gaussian_sse)]:
         t_ref, ai = fn(N, K, D)
+        results.append({
+            "name": name,
+            "us": t_ref * 1e6,
+            "allclose": True,
+            "arith_intensity": ai,
+            "shape": {"N": N, "K": K, "D": D},
+        })
         lines.append(
             f"kernel__{name},{t_ref * 1e6:.0f},"
             f"allclose=ok;arith_intensity={ai:.1f};shape=N{N}xK{K}xD{D}"
@@ -172,6 +188,15 @@ def main(argv=None):
     # collapsed_row: the row scan is serial, so bench at row-scan scale
     n_rows = min(N, 512)
     t_ref, t_fast, ai = bench_collapsed_row(n_rows, K, min(D, 64))
+    results.append({
+        "name": "collapsed_row",
+        "us": t_ref * 1e6,
+        "fast_us": t_fast * 1e6,
+        "ref_vs_fast": t_ref / t_fast,
+        "allclose": True,
+        "arith_intensity": ai,
+        "shape": {"N": n_rows, "K": K, "D": min(D, 64)},
+    })
     lines.append(
         f"kernel__collapsed_row,{t_ref * 1e6:.0f},"
         f"allclose=ok;fast_us={t_fast * 1e6:.0f};"
@@ -179,7 +204,7 @@ def main(argv=None):
         f"arith_intensity={ai:.1f};shape=N{n_rows}xK{K}xD{min(D, 64)}"
     )
     print(lines[-1], flush=True)
-    return lines
+    return lines, results
 
 
 if __name__ == "__main__":

@@ -4,13 +4,17 @@
 
 Prints a ``name,us_per_call,derived`` CSV block at the end (the harness
 contract) and writes a machine-readable ``BENCH_<iso-date>.json`` at the
-repo root (the durable perf trajectory: collapsed sweep ref-vs-fast
-rows/s per K, uncollapsed rows/s per backend, hybrid staged-vs-fused
-sync). ``--smoke`` runs the kernels + collapsed sections at tiny sizes
-and FAILS (exit 1) if the fast collapsed row step is below the
-``SMOKE_MIN_SPEEDUP``x gate vs the ref path at K=64 — the CI perf gate.
-Individual benchmarks are importable modules with their own CLIs for
-full-size runs; this runner uses CPU-sized defaults.
+repo root (the durable perf trajectory: kernel timings as structured
+JSON objects, collapsed sweep ref-vs-fast rows/s per K, the occupancy
+sweep packed-vs-unpacked rows/s per K_plus, uncollapsed rows/s per
+backend, hybrid staged-vs-fused sync). ``--smoke`` runs the kernels +
+collapsed sections at tiny sizes and FAILS (exit 1) if either perf gate
+trips: the fast collapsed row step below ``SMOKE_MIN_SPEEDUP``x ref at
+K=64, or the packed (occupancy-adaptive) fast path below
+``SMOKE_MIN_PACKED_SPEEDUP``x the unpacked fast path at
+K_max=64/K_plus=8 — the CI perf gates. Individual benchmarks are
+importable modules with their own CLIs for full-size runs; this runner
+uses CPU-sized defaults.
 """
 from __future__ import annotations
 
@@ -23,6 +27,7 @@ import time
 import traceback
 
 SMOKE_MIN_SPEEDUP = 2.0  # fast vs ref collapsed sweep at K=64, CPU
+SMOKE_MIN_PACKED_SPEEDUP = 1.5  # packed vs unpacked fast at K=64/K+=8, CPU
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -75,9 +80,10 @@ def main(argv=None) -> int:
         _section("kernels: Pallas vs jnp-oracle + arithmetic intensity")
         from benchmarks import kernels
         try:
-            lines = kernels.main(["--N", "1024"] if args.quick else [])
+            lines, results = kernels.main(["--N", "1024"] if args.quick
+                                          else [])
             csv += lines
-            bench["kernels"] = lines
+            bench["kernels"] = results  # structured objects, not csv strings
         except Exception:
             failures.append("kernels")
             traceback.print_exc()
@@ -87,16 +93,23 @@ def main(argv=None) -> int:
         from benchmarks import collapsed
         try:
             col_args = (["--N", "128", "--D", "32", "--Ks", "16", "64",
-                         "--iters", "2", "--warm", "2",
+                         "--iters", "2", "--warm", "3",
+                         "--occ-Kplus", "8", "--occ-N", "512",
+                         "--occ-D", "64", "--occ-iters", "5",
+                         "--repeats", "3",
                          "--skip-hybrid-sync"]
                         if args.smoke else
-                        (["--N", "256", "--iters", "3", "--warm", "2"]
+                        (["--N", "256", "--iters", "3", "--warm", "2",
+                          "--occ-N", "512", "--occ-D", "64"]
                          if args.quick else []))
             lines, payload = collapsed.main(col_args)
             csv += lines
             bench.update(payload)
             k64 = [r for r in payload["collapsed_sweep"]["results"]
                    if r["K_max"] == 64]
+            occ8 = [r for r in payload.get("occupancy_sweep",
+                                           {}).get("results", [])
+                    if r["K_max"] == 64 and r["K_plus_target"] == 8]
             if args.smoke:
                 if not k64:  # fail closed: the gate must never be vacuous
                     failures.append("collapsed perf gate: no K=64 row")
@@ -105,6 +118,16 @@ def main(argv=None) -> int:
                         f"collapsed perf gate: fast is "
                         f"{k64[0]['speedup']:.2f}x ref at K=64 "
                         f"(< {SMOKE_MIN_SPEEDUP}x)"
+                    )
+                # low-occupancy gate: packed must beat unpacked (DESIGN §14)
+                if not occ8:  # fail closed here too
+                    failures.append(
+                        "occupancy perf gate: no K_max=64/K_plus=8 row")
+                elif occ8[0]["packed_speedup"] < SMOKE_MIN_PACKED_SPEEDUP:
+                    failures.append(
+                        f"occupancy perf gate: packed fast is "
+                        f"{occ8[0]['packed_speedup']:.2f}x unpacked at "
+                        f"K_max=64/K_plus=8 (< {SMOKE_MIN_PACKED_SPEEDUP}x)"
                     )
         except Exception:
             failures.append("collapsed")

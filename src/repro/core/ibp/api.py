@@ -2,8 +2,10 @@
 
 One frozen, validated dataclass holds EVERY sampler knob — model sizes,
 kernel dispatch (``L``, ``backend``, ``collapsed_backend``,
-``chol_refresh``), parallelism layout (``chains`` x ``data``, ``n_chains``,
-``P``, ``sync``, ``stale_sync``) and run control — and
+``chol_refresh``, ``k_live_buckets`` — occupancy-adaptive packing of the
+collapsed carry, DESIGN.md §14), parallelism layout (``chains`` x
+``data``, ``n_chains``, ``P``, ``sync``, ``stale_sync``) and run control
+— and
 ``build_sampler(spec, hyp, X)`` turns it into a ``Sampler`` with a uniform
 protocol:
 
@@ -42,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .collapsed import COLLAPSED_BACKENDS, DEFAULT_REFRESH
+from .collapsed import COLLAPSED_BACKENDS, DEFAULT_REFRESH, K_LIVE_MODES
 from .hybrid import (
     HybridShard,
     build_hybrid_fns,
@@ -88,6 +90,7 @@ class SamplerSpec:
     backend: str = "jnp"       # uncollapsed sweep: "jnp" | "pallas"
     collapsed_backend: str = "fast"  # tail row step: "ref"|"fast"|"pallas"
     chol_refresh: int = DEFAULT_REFRESH  # fast-path refactor cadence
+    k_live_buckets: str = "on"  # occupancy-adaptive packing (DESIGN.md §14)
     # ---- parallelism layout (axes, not an enum)
     chains: str = "none"       # "none" | "vmap" | "mesh"
     data: str = "vmap"         # "vmap" | "shardmap"
@@ -131,6 +134,9 @@ class SamplerSpec:
                 f"{COLLAPSED_BACKENDS}")
         if self.chol_refresh < 1:
             bad(f"chol_refresh={self.chol_refresh} must be >= 1")
+        if self.k_live_buckets not in K_LIVE_MODES:
+            bad(f"k_live_buckets={self.k_live_buckets!r} not in "
+                f"{K_LIVE_MODES}")
         if self.P < 1:
             bad(f"P={self.P} must be >= 1")
         if self.L < 1:

@@ -35,6 +35,22 @@ Two row-step backends (DESIGN.md §12), selected by ``backend=``:
 * ``"pallas"`` — the fast path with the K-sequential bit-flip recurrence
   executed by the ``kernels/collapsed_row`` Pallas kernel (VMEM-resident
   carry; compiled on TPU, interpret elsewhere).
+
+Occupancy-adaptive packing (DESIGN.md §14), ``k_live_buckets="on"``: the
+fast/pallas carry additionally runs PACKED to the live K⁺ block — a
+power-of-two bucket B ∈ {8, 16, ..., K_max} holding every live column
+plus the lowest-index free slots, canonically ordered — so every dense
+op costs O(B²+BD) instead of O(K_max²+K_max·D), and G = HHᵀ joins the
+carry (moved by the rank-two corrections matching each H move) to
+restore the strict O(K²+KD) row bound the unpacked flip traded away.
+``collapsed_sweep`` picks the bucket host-side per sweep (and re-packs
+mid-sweep when a feature birth overflows the block — the overflowing
+row is re-run at the bigger bucket, so decisions stay on the oracle's
+trajectory); the in-jit entry ``collapsed_row_scan(pack=True)`` (the
+hybrid tail) runs the packed carry at the full padded width, where the
+G carry is the win. Packing is a pure permutation + refresh: decisions
+are ref-equivalent within the same boundary budget as the unpacked
+fast path.
 """
 from __future__ import annotations
 
@@ -57,6 +73,8 @@ COLLAPSED_BACKENDS = ("ref", "fast", "pallas")
 DEFAULT_REFRESH = 64    # exact refactorization cadence of the fast path
 DEFAULT_DRIFT_TOL = 1e-2  # probe-residual threshold forcing an early refresh
 PROBE_EVERY = 4         # drift-probe cadence within the refresh window
+K_LIVE_MODES = ("on", "off")  # occupancy-adaptive packing knob values
+PACK_HEADROOM = J_MAX   # free in-block slots guaranteed at (re)pack time
 
 
 def _log_poisson(j: Array, lam: Array) -> Array:
@@ -64,8 +82,8 @@ def _log_poisson(j: Array, lam: Array) -> Array:
 
 
 def _sample_dishes(kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D,
-                   birth):
-    """Shared new-dish move: returns (z', active', newbits).
+                   birth, n_free_extra=0.0):
+    """Shared new-dish move: returns (z', active', newbits, j_new).
 
     ``birth`` selects the move:
       * "gibbs" — exact truncated Gibbs over j ∈ 0..J_MAX (G&G; collapsed
@@ -74,6 +92,11 @@ def _sample_dishes(kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D,
         propose j ~ Poisson(alpha/N) and accept with the marginal-likelihood
         ratio (prior ∝ proposal, so they cancel). Out-of-capacity proposals
         are rejected.
+
+    ``n_free_extra`` is the packed row step's out-of-block free-slot
+    count: the draw must see the CANONICAL free capacity (what the
+    oracle sees), even when only the in-block slots are placeable — the
+    caller detects non-placeable births via ``j_new`` vs ``newbits``.
     """
     inv2s2 = 0.5 / (sx**2)
     lam = alpha / N
@@ -85,7 +108,7 @@ def _sample_dishes(kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D,
     s_j = s + js * rho
     ll_j = -0.5 * D * jnp.log(s_j) - inv2s2 * rss / s_j
     free = 1.0 - jnp.maximum(active_m, z)
-    n_free = jnp.sum(free)
+    n_free = jnp.sum(free) + n_free_extra
     if birth == "gibbs":
         # exact truncated Gibbs: j ~ ∝ Poisson(j; lam) lik(j)
         logits = _log_poisson(js, lam) + ll_j
@@ -105,7 +128,7 @@ def _sample_dishes(kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D,
     newbits = ((free_rank >= 1.0) & (free_rank <= j_new)).astype(z.dtype)
     z = z + newbits
     active_new = jnp.maximum(active_m, newbits)
-    return z, active_new, newbits
+    return z, active_new, newbits, j_new
 
 
 def _row_step(carry, n, *, X, N, D, birth="gibbs"):
@@ -150,7 +173,7 @@ def _row_step(carry, n, *, X, N, D, birth="gibbs"):
     )
 
     # ---- new dishes, j = 0..J_MAX
-    z, active_new, _ = _sample_dishes(
+    z, active_new, _, _ = _sample_dishes(
         kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D, birth
     )
 
@@ -320,7 +343,7 @@ def _row_step_fast(carry: _FastCarry, n, *, X, N, D, birth, alpha, sx, sa,
     )
 
     # ---- new dishes
-    z, active_new, newbits = _sample_dishes(
+    z, active_new, newbits, _ = _sample_dishes(
         kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D, birth
     )
 
@@ -393,6 +416,306 @@ def _row_step_fast(carry: _FastCarry, n, *, X, N, D, birth, alpha, sx, sa,
     ), None
 
 
+class _PackedCarry(NamedTuple):
+    """Row-scan carry of the OCCUPANCY-ADAPTIVE (packed) fast backend
+    (DESIGN.md §14). Everything feature-indexed lives on the K_live block
+    (size B, canonical columns ``cols`` ascending); only Z stays in the
+    canonical layout (rows are gathered/scattered through ``cols`` per
+    row). vs ``_FastCarry``: G = HHᵀ joins the carry — moved by the
+    rank-two corrections matching each Sherman–Morrison H move instead
+    of the per-row O(K²D) recompute in the packed flip — and ``n``/
+    ``ovf`` drive the early-exit while_loop (a birth that cannot be
+    placed inside the block stops the scan BEFORE committing its row, so
+    the host can repack and resume bitwise)."""
+
+    n: Array          # () int32 — next row to process
+    Z: Array          # (n_rows, K_canonical)
+    active: Array     # (B,)
+    ZtZ: Array        # (B, B)
+    ZtX: Array        # (B, D)
+    m: Array          # (B,)
+    Lt: Array         # (B, B)
+    M: Array          # (B, B)
+    H: Array          # (B, D)
+    G: Array          # (B, B) = H Hᵀ (carried)
+    since: Array
+    n_refresh: Array
+    ovf: Array        # () bool — birth did not fit the packed block
+
+
+@partial(jax.jit, static_argnames=("N", "birth", "B", "refresh_every",
+                                   "drift_tol", "flip_flavor"))
+def _packed_scan(
+    Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa, start_row, *,
+    N: float, birth: str, B: int, refresh_every: int,
+    drift_tol: float = DEFAULT_DRIFT_TOL, flip_flavor: str = "packed",
+):
+    """Packed row scan from ``start_row`` to the end of X — or to the
+    first birth that does not fit the K_live block.
+
+    Inputs and outputs are CANONICAL (K_max-padded); the block gather at
+    entry, the exact refactorization of the packed factor (+ G), and the
+    scatter back at exit happen inside this one jitted function, so a
+    bucket change costs exactly one repack + refresh. Returns
+    (Z, active, ZtZ, ZtX, m, n_refresh, key, ovf_row): ``ovf_row`` is -1
+    when the scan completed, else the first UNPROCESSED row — all rows
+    before it are committed, and the caller resumes from it after
+    repacking (``ibm.pick_bucket`` guarantees the pending birth then
+    fits, so every resume makes progress).
+
+    Decision equivalence: the block holds every live column plus the
+    lowest-index free slots in canonical order, the per-row uniform draw
+    keeps the oracle's (K_canonical,) shape (gathered through ``cols``),
+    and the new-dish draw sees the canonical free capacity — so the
+    only packed-vs-oracle differences are float-rounding boundary
+    events, exactly as for the unpacked fast path.
+    """
+    n_rows, D = X.shape
+    K_can = Z.shape[1]
+    cols, min_out = ibm.block_select(active, B)
+    n_out_free = float(K_can - B)  # out-of-block slots are free by invariant
+    active_p = active[cols]
+    ZtZ_p = ZtZ[cols][:, cols]
+    ZtX_p = ZtX[cols]
+    m_p = m[cols]
+    ratio = (sx / sa) ** 2
+    Lt0, M0, H0 = _exact_factor(ZtZ_p, ZtX_p, active_p, ratio)
+    # the mean-form pallas flip never consumes G — skip the whole G carry
+    # (moves, refresh rebuild, probe term) at trace time for that flavor
+    carry_g = flip_flavor != "pallas"
+    G0 = H0 @ H0.T if carry_g else jnp.zeros((), X.dtype)
+    inv2s2 = 0.5 / (sx**2)
+
+    # ---- hoist the oracle's per-row PRNG out of the serial loop: the
+    # split chain and the (K_canonical,)-wide uniform draws are batched
+    # into one scan + one vmapped threefry — bitwise the same stream,
+    # but the K-wide generation no longer serializes with the row steps.
+    # The chain is POSITIONAL in rows-processed-this-segment (the oracle
+    # splits once per processed row, regardless of row index), so every
+    # lookup below is relative to start_row; chain_data[j] = the carry
+    # key after j processed rows, making the resume-after-overflow key
+    # chain_data[ovf_row - start_row].
+    sr = jnp.asarray(start_row, jnp.int32)
+
+    def key_step(k, _):
+        k2, kbits, kdish, _kslot = jax.random.split(k, 4)
+        return k2, (jax.random.key_data(k2), kbits, kdish)
+
+    _, (chain_next, kbits_all, kdish_all) = jax.lax.scan(
+        key_step, key, None, length=n_rows)
+    chain_data = jnp.concatenate(
+        [jax.random.key_data(key)[None], chain_next])
+    uu = jax.vmap(
+        lambda k: jax.random.uniform(k, (K_can,), dtype=X.dtype)
+    )(kbits_all)
+    uu = jnp.clip(uu, 1e-7, 1.0 - 1e-7)
+    u_all = jnp.log(uu) - jnp.log1p(-uu)
+
+    def body(c: _PackedCarry) -> _PackedCarry:
+        n = c.n
+        active, ZtZ, ZtX, m = c.active, c.ZtZ, c.ZtX, c.m
+        Lt, M, H, G = c.Lt, c.M, c.H, c.G
+        x_n = X[n]
+        z_old = c.Z[n][cols]
+        # ---- remove row n (Sherman–Morrison; mirrors _row_step_fast on
+        # the packed block — see that function for the algebra notes)
+        m_minus = m - z_old
+        zu = z_old * active
+        w = M @ zu
+        p_down = Lt @ w
+        down_ok = jnp.all(1.0 - jnp.cumsum(p_down * p_down) > 1e-12)
+        gamma = jnp.dot(zu, w)
+        delta_s = jnp.maximum(1.0 - gamma, 1e-6)
+        zH = zu @ H
+        wr = w / jnp.sqrt(delta_s)
+        wd = w / delta_s
+        b_rm = zH - x_n
+        M1 = M + jnp.outer(wr, wr)
+        H1 = H + jnp.outer(wd, b_rm)
+        # pre-move H, same as the SM read
+        G1 = ibm.g_rank1(G, H, wd, b_rm) if carry_g else G
+        drop = active * (m_minus <= 0.5)
+        z = z_old * (1.0 - drop)
+        active_m = active * (1.0 - drop)
+        has_drop = jnp.any(drop > 0.5)
+        # unconditional drop masking: on the no-drop path the carry
+        # already holds exact zeros on inactive rows/cols, so the
+        # multiply is a bitwise no-op — cheaper than a branch at block
+        # sizes (the unpacked path gates this; at B ≤ K_max the cond's
+        # dispatch costs more than B² multiplies)
+        keep2 = ibm.mask_outer(active_m)
+        M1 = M1 * keep2
+        H1 = H1 * active_m[:, None]
+        if carry_g:
+            G1 = G1 * keep2
+
+        # ---- drift monitor: the M probe of the unpacked path, plus the
+        # G-consistency residual ‖G p − H(Hᵀp)‖∞ (relative to max|G|) so
+        # the carried G is covered by the same monitor (DESIGN.md §14)
+        def do_probe(_):
+            tm = ZtZ @ active_m - z_old * jnp.dot(z_old, active_m)
+            probe_t = active_m * tm + ratio * active_m
+            d_m = jnp.max(jnp.abs(M1 @ probe_t - active_m))
+            if not carry_g:
+                return d_m
+            d_g = jnp.max(jnp.abs(G1 @ active_m - H1 @ (active_m @ H1)))
+            d_g = d_g / (1.0 + jnp.max(jnp.abs(G1)))
+            return jnp.maximum(d_m, d_g)
+
+        drift = jax.lax.cond(
+            c.since % PROBE_EVERY == 0, do_probe,
+            lambda _: jnp.zeros((), X.dtype), None,
+        )
+        need = ((c.since >= refresh_every - 1) | (~down_ok)
+                | (~(drift <= drift_tol)))
+
+        def do_refresh(_):
+            ZtZ_m = ZtZ - jnp.outer(z_old, z_old)
+            ZtX_m = ZtX - jnp.outer(z_old, x_n)
+            L2, M2 = ibm.chol_inv(ibm.padded_W(ZtZ_m, active_m, ratio))
+            M2 = M2 * ibm.mask_outer(active_m)
+            H2 = M2 @ (ZtX_m * active_m[:, None])
+            return L2.T, M2, H2, (H2 @ H2.T if carry_g else G)
+
+        Lt_rm, M1, H1, G1 = jax.lax.cond(
+            need, do_refresh, lambda _: (Lt, M1, H1, G1), None
+        )
+        since = jnp.where(need, 0, c.since + 1)
+        n_refresh = c.n_refresh + need.astype(c.n_refresh.dtype)
+
+        # ---- bit flips: the oracle's PRNG stream (canonical-width
+        # uniforms, precomputed above, gathered onto the block)
+        u = u_all[n - sr][cols]
+        kdish = kdish_all[n - sr]
+
+        def vqm_closed(_):
+            gd = gamma / delta_s
+            return wd, gd, zH + gd * (zH - x_n)
+
+        def vqm_matvec(_):
+            v = M1 @ z
+            return v, jnp.dot(z, v), z @ H1
+
+        v, q, mean = jax.lax.cond(
+            has_drop | need, vqm_matvec, vqm_closed, None
+        )
+        z, v, q, mean = collapsed_row_flip(
+            M1, H1, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2,
+            flavor=flip_flavor, G=G1 if carry_g else None,
+        )
+
+        # ---- new dishes: canonical free capacity; placement must stay
+        # inside the block AND below every out-of-block index to match
+        # the oracle's first-free-slot rule — otherwise flag + bail
+        z2, active_new, newbits, j_new = _sample_dishes(
+            kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D, birth,
+            n_free_extra=n_out_free,
+        )
+        top_col = jnp.max(jnp.where(newbits > 0.5, cols, -1))
+        birth_ovf = (jnp.sum(newbits) < j_new) | (top_col >= min_out)
+
+        # ---- add row n back (same gating as the unpacked fast path)
+        m_new = m_minus * active_m + z2
+        changed = (
+            need | jnp.any(z2 != z_old) | jnp.any(active_new != active)
+        )
+
+        def stats_moved(_):
+            def masked(_):
+                return ((ZtZ - jnp.outer(z_old, z_old))
+                        * ibm.mask_outer(active_m) + jnp.outer(z2, z2),
+                        (ZtX - jnp.outer(z_old, x_n)) * active_m[:, None]
+                        + jnp.outer(z2, x_n))
+
+            def fused(_):
+                return (ZtZ + jnp.outer(z2, z2) - jnp.outer(z_old, z_old),
+                        ZtX + jnp.outer(z2 - z_old, x_n))
+
+            return jax.lax.cond(has_drop, masked, fused, None)
+
+        ZtZ_n, ZtX_n = jax.lax.cond(
+            changed | has_drop, stats_moved, lambda _: (ZtZ, ZtX), None
+        )
+
+        def apply_moves(_):
+            Lt1 = jax.lax.cond(
+                need,
+                lambda __: Lt_rm,
+                lambda __: ibm.chol_rank1_downdate_t(Lt, p_down)[0],
+                None,
+            )
+
+            def diag_swaps(ops):
+                Lt1, M1, H1, G1 = ops
+                keep2 = ibm.mask_outer(active_m)
+                Lt1 = Lt1 * keep2 + jnp.diag(1.0 - active_m)
+                Lt1 = Lt1 + jnp.diag(newbits * (jnp.sqrt(ratio) - 1.0))
+                M1b = M1 + jnp.diag(newbits / ratio)
+                H1b = H1 * (1.0 - newbits)[:, None]
+                G1b = (G1 * ibm.mask_outer(1.0 - newbits) if carry_g
+                       else G1)
+                return Lt1, M1b, H1b, G1b
+
+            Lt1, M1b, H1b, G1b = jax.lax.cond(
+                has_drop | jnp.any(newbits > 0.5), diag_swaps,
+                lambda ops: ops, (Lt1, M1, H1, G1),
+            )
+            w2 = M1b @ z2
+            Lt2 = ibm.chol_rank1_update_t(Lt1, Lt1 @ w2)
+            d2 = 1.0 + jnp.dot(z2, w2)
+            w2r = w2 / jnp.sqrt(d2)
+            M2 = M1b - jnp.outer(w2r, w2r)
+            b_add = x_n - z2 @ H1b
+            H2 = H1b + jnp.outer(w2 / d2, b_add)
+            G2 = ibm.g_rank1(G1b, H1b, w2 / d2, b_add) if carry_g else G1b
+            return Lt2, M2, H2, G2
+
+        Lt_n, M_n, H_n, G_n = jax.lax.cond(
+            changed, apply_moves, lambda _: (Lt, M, H, G), None
+        )
+        # on birth overflow: keep the pre-row carry verbatim (the key
+        # chain is positional — the retry re-reads the identical draws).
+        # Elementwise selects, NOT a lax.cond over the whole carry: a
+        # branch returning every buffer (Z included) forces whole-buffer
+        # copies per row, which dwarfs the packed savings.
+        def sel(old, new_):
+            return jnp.where(birth_ovf, old, new_)
+
+        return _PackedCarry(
+            n=n + (~birth_ovf).astype(jnp.int32),
+            # overflow writes the just-gathered bits back: an in-place no-op
+            Z=c.Z.at[n, cols].set(sel(z_old, z2)),
+            active=sel(active, active_new),
+            ZtZ=sel(ZtZ, ZtZ_n), ZtX=sel(ZtX, ZtX_n), m=sel(m, m_new),
+            Lt=sel(Lt, Lt_n), M=sel(M, M_n), H=sel(H, H_n), G=sel(G, G_n),
+            since=sel(c.since, since),
+            n_refresh=sel(c.n_refresh, n_refresh),
+            ovf=birth_ovf,
+        )
+
+    carry0 = _PackedCarry(
+        n=jnp.asarray(start_row, jnp.int32), Z=Z, active=active_p,
+        ZtZ=ZtZ_p, ZtX=ZtX_p, m=m_p, Lt=Lt0, M=M0, H=H0, G=G0,
+        since=jnp.zeros((), jnp.int32), n_refresh=jnp.zeros((), jnp.int32),
+        ovf=jnp.zeros((), jnp.bool_),
+    )
+    out = jax.lax.while_loop(
+        lambda c: (c.n < n_rows) & (~c.ovf), body, carry0
+    )
+    # scatter the block back to the canonical layout (out-of-block slots
+    # are free: zero stats by the block invariant)
+    dt = X.dtype
+    active_c = jnp.zeros((K_can,), dt).at[cols].set(out.active)
+    ZtZ_c = jnp.zeros((K_can, K_can), dt).at[cols[:, None],
+                                             cols[None, :]].set(out.ZtZ)
+    ZtX_c = jnp.zeros((K_can, D), dt).at[cols].set(out.ZtX)
+    m_c = jnp.zeros((K_can,), dt).at[cols].set(out.m)
+    ovf_row = jnp.where(out.ovf, out.n, -1)
+    key_out = jax.random.wrap_key_data(chain_data[out.n - sr])
+    return (out.Z, active_c, ZtZ_c, ZtX_c, m_c, out.n_refresh, key_out,
+            ovf_row)
+
+
 def collapsed_row_scan(
     Z: Array,
     active: Array,
@@ -410,6 +733,7 @@ def collapsed_row_scan(
     backend: str = "ref",
     refresh_every: int = DEFAULT_REFRESH,
     drift_tol: float = DEFAULT_DRIFT_TOL,
+    pack: bool = False,
 ) -> tuple[Array, Array, Array, Array, Array, Array]:
     """Scan the collapsed row step over every row of ``X``.
 
@@ -417,6 +741,13 @@ def collapsed_row_scan(
     and the hybrid tail (``hybrid._tail_sub_iteration``). Returns
     (Z, active, ZtZ, ZtX, m, n_refresh); ``n_refresh`` counts exact
     refactorizations (cadence + monitor) and is 0 on the ref backend.
+
+    ``pack=True`` routes the fast/pallas carry through the packed row
+    step at the FULL padded width (a static in-jit bucket: B = K). The
+    bucketed B < K_max dispatch needs the host (``collapsed_sweep``);
+    what this in-jit entry buys — the hybrid tail in particular — is the
+    carried G = HHᵀ, which removes the per-row O(K²D) GEMM from the
+    packed flip (DESIGN.md §14). Ignored for ``backend="ref"``.
     """
     if backend not in COLLAPSED_BACKENDS:
         raise ValueError(f"backend={backend!r} not in {COLLAPSED_BACKENDS}")
@@ -428,6 +759,15 @@ def collapsed_row_scan(
         carry, _ = jax.lax.scan(body, carry, rows)
         Z, active, ZtZ, ZtX, m = carry[:5]
         return Z, active, ZtZ, ZtX, m, jnp.zeros((), jnp.int32)
+    if pack:
+        # full-width block: overflow is impossible (no out-of-block slots)
+        Z, active, ZtZ, ZtX, m, n_refresh, _, _ = _packed_scan(
+            Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa, 0,
+            N=N, birth=birth, B=Z.shape[1], refresh_every=refresh_every,
+            drift_tol=drift_tol,
+            flip_flavor="pallas" if backend == "pallas" else "packed",
+        )
+        return Z, active, ZtZ, ZtX, m, n_refresh
     ratio = (sx / sa) ** 2
     Lt, M, H = _exact_factor(ZtZ, ZtX, active, ratio)
     body = partial(
@@ -445,28 +785,12 @@ def collapsed_row_scan(
     return carry.Z, carry.active, carry.ZtZ, carry.ZtX, carry.m, carry.n_refresh
 
 
-@partial(jax.jit, static_argnames=("hyp", "backend", "refresh_every"))
-def collapsed_sweep(
-    state: IBPState,
-    X: Array,
-    hyp: IBPHypers,
-    backend: str = "ref",
-    refresh_every: int = DEFAULT_REFRESH,
-) -> IBPState:
-    """One full collapsed Gibbs sweep over all rows + hyperparameter updates."""
+def _finish_sweep(state, X, hyp, Z, active, ZtZ, ZtX, m,
+                  key, kalpha, ksx, ksa) -> IBPState:
+    """Post-scan pruning + hyperparameter updates shared by every sweep
+    path (the jitted unpacked sweep traces it inline; the host-bucketed
+    packed sweep calls the jitted wrapper below)."""
     N, D = X.shape
-    Z, active = state.Z, state.active
-    m = jnp.sum(Z * active[None, :], axis=0)
-    ZtZ = (Z.T @ Z) * ibm.mask_outer(active)
-    ZtX = (Z.T @ X) * active[:, None]
-    key, ksweep, kalpha, ksx, ksa = jax.random.split(state.key, 5)
-
-    Z, active, ZtZ, ZtX, m, _ = collapsed_row_scan(
-        Z, active, ZtZ, ZtX, m, X, ksweep,
-        state.alpha, state.sigma_x, state.sigma_a,
-        N=float(N), birth="gibbs", backend=backend,
-        refresh_every=refresh_every,
-    )
     alpha, sx, sa = state.alpha, state.sigma_x, state.sigma_a
 
     # prune columns that died during the sweep
@@ -512,3 +836,159 @@ def collapsed_sweep(
         alpha=alpha, sigma_x=sx, sigma_a=sa, key=key,
         p_prime=state.p_prime, it=state.it + 1,
     )
+
+
+_finish_sweep_jit = jax.jit(_finish_sweep, static_argnames=("hyp",))
+
+
+@partial(jax.jit, static_argnames=("hyp", "backend", "refresh_every"))
+def _collapsed_sweep_jit(
+    state: IBPState,
+    X: Array,
+    hyp: IBPHypers,
+    backend: str = "ref",
+    refresh_every: int = DEFAULT_REFRESH,
+) -> IBPState:
+    """One fully-jitted collapsed sweep (ref, or unpacked fast/pallas)."""
+    N, D = X.shape
+    Z, active = state.Z, state.active
+    m, ZtZ, ZtX, _ = _sweep_stats(Z, active, X)
+    key, ksweep, kalpha, ksx, ksa = jax.random.split(state.key, 5)
+
+    Z, active, ZtZ, ZtX, m, _ = collapsed_row_scan(
+        Z, active, ZtZ, ZtX, m, X, ksweep,
+        state.alpha, state.sigma_x, state.sigma_a,
+        N=float(N), birth="gibbs", backend=backend,
+        refresh_every=refresh_every,
+    )
+    return _finish_sweep(state, X, hyp, Z, active, ZtZ, ZtX, m,
+                         key, kalpha, ksx, ksa)
+
+
+def _sweep_stats(Z, active, X):
+    """Exact sweep-entry sufficient statistics (+ K⁺ for bucket choice)."""
+    m = jnp.sum(Z * active[None, :], axis=0)
+    ZtZ = (Z.T @ Z) * ibm.mask_outer(active)
+    ZtX = (Z.T @ X) * active[:, None]
+    return m, ZtZ, ZtX, jnp.sum(active)
+
+
+@partial(jax.jit, static_argnames=("hyp", "backend", "refresh_every", "B"))
+def _packed_sweep_jit(state, X, hyp, backend, refresh_every, B):
+    """One FUSED packed sweep attempt at bucket ``B``: stats + packed
+    scan from row 0 + hyper-update finish, all in one dispatch.
+
+    Returns (finished_state, raw_segment_outputs, ovf_row). On the
+    common no-overflow sweep the host uses ``finished_state`` directly —
+    one dispatch plus two scalar fetches (the pre-sweep occupancy for
+    the bucket choice and ``ovf_row``), nearly the dispatch profile of
+    the unpacked jitted sweep. On the rare birth overflow the finish is
+    discarded and the host resumes segment-wise from
+    ``raw_segment_outputs`` (the speculative finish is the only wasted
+    work).
+    """
+    N, D = X.shape
+    m, ZtZ, ZtX, _ = _sweep_stats(state.Z, state.active, X)
+    key, ksweep, kalpha, ksx, ksa = jax.random.split(state.key, 5)
+    Z, active, ZtZ2, ZtX2, m2, _, ksweep2, ovf_row = _packed_scan(
+        state.Z, state.active, ZtZ, ZtX, m, X, ksweep,
+        state.alpha, state.sigma_x, state.sigma_a, 0,
+        N=float(N), birth="gibbs", B=B, refresh_every=refresh_every,
+        flip_flavor="pallas" if backend == "pallas" else "packed",
+    )
+    done = _finish_sweep(state, X, hyp, Z, active, ZtZ2, ZtX2, m2,
+                         key, kalpha, ksx, ksa)
+    raw = (Z, active, ZtZ2, ZtX2, m2, ksweep2, key, kalpha, ksx, ksa)
+    return done, raw, ovf_row
+
+
+def _collapsed_sweep_packed(
+    state: IBPState,
+    X: Array,
+    hyp: IBPHypers,
+    backend: str,
+    refresh_every: int,
+    seg_log: list | None = None,
+) -> IBPState:
+    """Host-bucketed packed sweep (DESIGN.md §14).
+
+    The host picks the K_live bucket — the smallest power-of-two bucket
+    holding K⁺ + PACK_HEADROOM (``ibm.pick_bucket``) — and runs ONE
+    fused jitted sweep at that static width (``_packed_sweep_jit``). A
+    birth overflowing the block returns early with the finish discarded;
+    the host then re-picks the bucket from the post-segment occupancy
+    (repack UP when births filled the headroom; the shrink direction
+    falls out for free at the next sweep boundary, whose segment start
+    is an exact refactorization anyway) and resumes segment-wise from
+    the first unprocessed row via ``_packed_scan``. The jit cache holds
+    at most one entry per bucket — O(log K_max).
+
+    ``seg_log`` (tests/benchmarks) receives one ``(bucket, start_row)``
+    tuple per segment.
+    """
+    N, D = X.shape
+    K_max = state.Z.shape[1]
+    buckets = ibm.live_buckets(K_max)
+    flavor = "pallas" if backend == "pallas" else "packed"
+    kp = int(jnp.sum(state.active))
+    B = ibm.pick_bucket(buckets, kp, PACK_HEADROOM)
+    if seg_log is not None:
+        seg_log.append((B, 0))
+    done, raw, ovf_row = _packed_sweep_jit(
+        state, X, hyp=hyp, backend=backend,
+        refresh_every=refresh_every, B=B)
+    ovf = int(ovf_row)
+    if ovf < 0:
+        return done
+    # rare path: mid-sweep birth overflow — resume segment-wise
+    Z, active, ZtZ, ZtX, m, ksweep, key, kalpha, ksx, ksa = raw
+    alpha, sx, sa = state.alpha, state.sigma_x, state.sigma_a
+    row = ovf
+    kp = int(jnp.sum(active))
+    while row < N:
+        B = ibm.pick_bucket(buckets, kp, PACK_HEADROOM)
+        if seg_log is not None:
+            seg_log.append((B, row))
+        Z, active, ZtZ, ZtX, m, _, ksweep, ovf_row = _packed_scan(
+            Z, active, ZtZ, ZtX, m, X, ksweep, alpha, sx, sa, row,
+            N=float(N), birth="gibbs", B=B, refresh_every=refresh_every,
+            flip_flavor=flavor,
+        )
+        # ONE host round-trip per segment: the overflow row and the
+        # next bucket choice's occupancy fetch together
+        ovf, kp = map(int, jax.device_get((ovf_row, jnp.sum(active))))
+        row = N if ovf < 0 else ovf
+    return _finish_sweep_jit(state, X, hyp=hyp, Z=Z, active=active,
+                             ZtZ=ZtZ, ZtX=ZtX, m=m, key=key,
+                             kalpha=kalpha, ksx=ksx, ksa=ksa)
+
+
+def collapsed_sweep(
+    state: IBPState,
+    X: Array,
+    hyp: IBPHypers,
+    backend: str = "ref",
+    refresh_every: int = DEFAULT_REFRESH,
+    k_live_buckets: str = "on",
+    seg_log: list | None = None,
+) -> IBPState:
+    """One full collapsed Gibbs sweep over all rows + hyperparameter updates.
+
+    ``k_live_buckets`` selects occupancy-adaptive packing for the
+    fast/pallas backends (DESIGN.md §14): ``"on"`` (default) runs the
+    carried factorization on the live K⁺ bucket via the host-dispatched
+    packed scan; ``"off"`` keeps the fully-jitted unpacked carry at
+    K_max (the pre-packing behavior). The ref backend has no carry and
+    ignores the knob.
+    """
+    if k_live_buckets not in K_LIVE_MODES:
+        raise ValueError(
+            f"k_live_buckets={k_live_buckets!r} not in {K_LIVE_MODES}"
+        )
+    if backend not in COLLAPSED_BACKENDS:
+        raise ValueError(f"backend={backend!r} not in {COLLAPSED_BACKENDS}")
+    if backend == "ref" or k_live_buckets == "off":
+        return _collapsed_sweep_jit(state, X, hyp, backend=backend,
+                                    refresh_every=refresh_every)
+    return _collapsed_sweep_packed(state, X, hyp, backend, refresh_every,
+                                   seg_log=seg_log)

@@ -167,6 +167,7 @@ def _tail_sub_iteration(
     key: Array,
     collapsed_backend: str = "ref",
     chol_refresh: int = DEFAULT_REFRESH,
+    k_live_pack: bool = False,
 ) -> tuple[Array, Array]:
     """Collapsed Gibbs + MH births on the tail (runs on p' only).
 
@@ -174,7 +175,10 @@ def _tail_sub_iteration(
     §12): the K_tail ≤ 8 problem is too small for the O(K²) carry to
     matter, but the "pallas" flavor moves the K-sequential bit-flip
     recurrence into the ``collapsed_row`` kernel, keeping the whole tail
-    recurrence VMEM-resident on TPU.
+    recurrence VMEM-resident on TPU. ``k_live_pack`` (the spec's
+    ``k_live_buckets`` knob) routes the fast/pallas carry through the
+    packed row step — in-jit the block is the full K_tail width, so what
+    the tail gains is the carried G = HHᵀ (DESIGN.md §14).
     """
     # residual given instantiated features = the tail model's data
     R = X_p - (Z * gs.active[None, :]) @ gs.A
@@ -185,7 +189,7 @@ def _tail_sub_iteration(
         Z_tail, tail_active, ZtZ_t, ZtR, m_t, R, key,
         gs.alpha, gs.sigma_x, gs.sigma_a,
         N=N_global, birth="mh", backend=collapsed_backend,
-        refresh_every=chol_refresh,
+        refresh_every=chol_refresh, pack=k_live_pack,
     )
     # prune dead tail columns
     tail_active = tail_active * (m_t > 0.5)
@@ -205,6 +209,7 @@ def shard_sub_iterations(
     backend: str = "jnp",
     collapsed_backend: str = "ref",
     chol_refresh: int = DEFAULT_REFRESH,
+    k_live_pack: bool = False,
 ) -> tuple[Array, Array, Array]:
     """L sub-iterations of the paper's inner loop on one shard."""
     key_shard = jax.random.fold_in(gs.key, shard_idx)
@@ -224,6 +229,7 @@ def shard_sub_iterations(
                 X_p, Z, Z_tail, tail_active, gs, N_global, kt,
                 collapsed_backend=collapsed_backend,
                 chol_refresh=chol_refresh,
+                k_live_pack=k_live_pack,
             )
 
         Z_tail, tail_active = jax.lax.cond(
@@ -353,6 +359,7 @@ def _hybrid_iteration_body(
     backend: str,
     collapsed_backend: str = "ref",
     chol_refresh: int = DEFAULT_REFRESH,
+    k_live_pack: bool = False,
 ) -> tuple[HybridGlobal, HybridShard]:
     """One full hybrid iteration for ONE chain (vmap-simulated shards).
 
@@ -366,6 +373,7 @@ def _hybrid_iteration_body(
     sub = partial(
         shard_sub_iterations, N_global=N_g, L=L, backend=backend,
         collapsed_backend=collapsed_backend, chol_refresh=chol_refresh,
+        k_live_pack=k_live_pack,
     )
     Z, Z_tail, tail_active = jax.vmap(
         sub, in_axes=(0, 0, 0, 0, None, 0)
@@ -437,6 +445,7 @@ def _hybrid_stale_body(
     backend: str,
     collapsed_backend: str,
     chol_refresh: int,
+    k_live_pack: bool = False,
 ) -> tuple[HybridGlobal, HybridShard]:
     """Bounded-staleness pass for ONE chain: shard sub-iterations WITHOUT
     the master sync (DESIGN.md §10).
@@ -454,7 +463,7 @@ def _hybrid_stale_body(
     gs_sweep = dataclasses.replace(gs, key=jax.random.fold_in(gs.key, 13))
     sub = partial(shard_sub_iterations, N_global=N_g, L=L, backend=backend,
                   collapsed_backend=collapsed_backend,
-                  chol_refresh=chol_refresh)
+                  chol_refresh=chol_refresh, k_live_pack=k_live_pack)
     Z, Z_tail, tail_active = jax.vmap(
         sub, in_axes=(0, 0, 0, 0, None, 0)
     )(X_shards, ss.Z, ss.Z_tail, ss.tail_active, gs_sweep, jnp.arange(P_))
@@ -524,12 +533,14 @@ def _build_vmap_fns(spec, hyp, N_g: float) -> HybridFns:
     axis vmapped OVER the full iteration (DESIGN.md §11)."""
     L, be = spec.L, spec.backend
     cb, cr = spec.collapsed_backend, spec.chol_refresh
+    pk = spec.k_live_buckets == "on"
 
     def step_one(Xs, gs, ss):
-        return _hybrid_iteration_body(Xs, gs, ss, hyp, L, N_g, be, cb, cr)
+        return _hybrid_iteration_body(Xs, gs, ss, hyp, L, N_g, be, cb, cr,
+                                      pk)
 
     def stale_one(Xs, gs, ss):
-        return _hybrid_stale_body(Xs, gs, ss, L, N_g, be, cb, cr)
+        return _hybrid_stale_body(Xs, gs, ss, L, N_g, be, cb, cr, pk)
 
     if spec.chains == "vmap":
         # built ONCE as jit(vmap(...)) — a bare vmap-of-jit would re-trace
@@ -578,6 +589,7 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
 
     L, be = spec.L, spec.backend
     cb, cr = spec.collapsed_backend, spec.chol_refresh
+    pk = spec.k_live_buckets == "on"
     sync = spec.sync
     chainful = spec.chains == "mesh"
     data_sharded = spec.data == "shardmap"
@@ -614,7 +626,8 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
                     gs, key=jax.random.fold_in(gs.key, 13)
                 )
                 Z_p, Zt_p, ta = shard_sub_iterations(
-                    X_p, Z_p, Zt_p, ta, gs_sweep, idx, N_g, L, be, cb, cr
+                    X_p, Z_p, Zt_p, ta, gs_sweep, idx, N_g, L, be, cb, cr,
+                    pk,
                 )
                 gs_out = dataclasses.replace(
                     gs, key=jax.random.fold_in(gs.key, 14)
@@ -625,7 +638,7 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
                 ta = ta_p[0]  # (1, K_tail) local block -> (K_tail,)
                 idx = compat.axis_index(data_axes)
                 Z_p, Zt_p2, ta = shard_sub_iterations(
-                    X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, be, cb, cr
+                    X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, be, cb, cr, pk
                 )
                 tail_g = jax.lax.psum(ta, data_axes)                # AR 1
                 Z_p, active_new, n_drop = promote_tail(Z_p, Zt_p2, tail_g,
@@ -645,7 +658,7 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
                 ta = ta_p[0]
                 idx = compat.axis_index(data_axes)
                 Z_p, Zt_p2, ta = shard_sub_iterations(
-                    X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, be, cb, cr
+                    X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, be, cb, cr, pk
                 )
                 K_max = Z_p.shape[1]
                 K_tail = ta.shape[0]
@@ -690,10 +703,11 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
                 ss_c = HybridShard(Z=Z_c, Z_tail=Zt_c, tail_active=ta_c)
                 if stale:
                     gs2, ss2 = _hybrid_stale_body(X_full, gs, ss_c, L, N_g,
-                                                  be, cb, cr)
+                                                  be, cb, cr, pk)
                 else:
                     gs2, ss2 = _hybrid_iteration_body(X_full, gs, ss_c, hyp,
-                                                      L, N_g, be, cb, cr)
+                                                      L, N_g, be, cb, cr,
+                                                      pk)
                 return gs2, ss2.Z, ss2.Z_tail, ss2.tail_active
 
             if data_sharded:

@@ -200,6 +200,90 @@ def chol_rank1_downdate(L: Array, x: Array, eps: float = 1e-12) -> tuple[Array, 
     return Lt.T, ok
 
 
+def g_rank1(G: Array, H: Array, a: Array, b: Array) -> Array:
+    """Move G = H Hᵀ through the rank-one map move H' = H + a bᵀ.
+
+    G' = (H + a bᵀ)(H + a bᵀ)ᵀ = G + a(Hb)ᵀ + (Hb)aᵀ + (b·b) a aᵀ —
+    a symmetric rank-two correction costing O(K² + KD), vs the O(K²D)
+    G recompute it replaces in the packed collapsed flip (DESIGN.md §14).
+    ``H`` is the PRE-move map (the same H the Sherman–Morrison move read).
+
+    Evaluated as a cᵀ + c aᵀ with c = Hb + (b·b)/2 · a, so the result is
+    EXACTLY symmetric whenever G is (a_i c_j + c_i a_j is commutative in
+    float) — the packed flip reads G rows as columns.
+
+    Padding contract: a padded/inactive slot j has H[j] = 0 and a_j = 0
+    (callers mask the rank-one vector), so row/col j of every correction
+    term is exactly 0 — padding-transparent, like the chol moves.
+    """
+    c = H @ b + (0.5 * jnp.dot(b, b)) * a
+    return G + (jnp.outer(a, c) + jnp.outer(c, a))
+
+
+# --------------------------------------------------------------------------
+# occupancy-adaptive packing: K_live bucket policy + block permutations
+# (DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+
+def live_buckets(K_max: int, base: int = 8) -> tuple[int, ...]:
+    """Power-of-two K_live block sizes (8, 16, 32, ...) capped by K_max.
+
+    K_max itself is always the last bucket, so a full-occupancy chain
+    degenerates to today's unpacked layout; the bucket count is
+    O(log K_max), which bounds the jit compile cache of the packed scan.
+    """
+    if K_max < 1:
+        raise ValueError(f"K_max={K_max} must be >= 1")
+    bs = []
+    b = base
+    while b < K_max:
+        bs.append(b)
+        b *= 2
+    bs.append(K_max)
+    return tuple(bs)
+
+
+def pick_bucket(buckets: tuple[int, ...], k_plus: int, headroom: int) -> int:
+    """Smallest bucket with room for ``k_plus`` live features + headroom.
+
+    Host-side policy: ``headroom`` in-block free slots guarantee the next
+    per-row birth (j_new <= J_MAX) fits without a repack; when nothing
+    fits, the largest bucket (== K_max) is returned — at full width the
+    packed scan can never overflow.
+    """
+    for b in buckets:
+        if b >= k_plus + headroom:
+            return b
+    return buckets[-1]
+
+
+def block_select(active: Array, B: int) -> tuple[Array, Array]:
+    """Canonical columns of the packed K_live block, ascending.
+
+    The block is every live column plus the LOWEST-index free slots
+    filling up to ``B`` — so in-canonical-order iteration over the block
+    visits live columns in the oracle's order, and new-dish placement
+    into the block's free slots matches the oracle's first-free-slot rule
+    as long as the birth stays below ``min_out`` (the smallest
+    out-of-block canonical index; every out-of-block slot is free by
+    construction). Requires sum(active) <= B, which the bucket policy
+    guarantees host-side.
+
+    Returns (cols (B,) int32, min_out () int32 — K when the block covers
+    everything).
+    """
+    K = active.shape[0]
+    free_rank = jnp.cumsum(1.0 - active) * (1.0 - active)
+    n_live = jnp.sum(active)
+    sel = (active > 0.5) | ((free_rank >= 1.0) & (free_rank <= B - n_live))
+    cols = jnp.nonzero(sel, size=B, fill_value=K - 1)[0].astype(jnp.int32)
+    min_out = jnp.min(
+        jnp.where(sel, K, jnp.arange(K))
+    ).astype(jnp.int32)
+    return cols, min_out
+
+
 def a_posterior(
     ZtZ: Array,
     ZtX: Array,

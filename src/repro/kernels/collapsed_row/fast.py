@@ -6,17 +6,22 @@ exactness-preserving rewrites (DESIGN.md §12):
 * **O(K) per bit instead of O(K + D).** The likelihood only consumes the
   residual through its norm, so carry (rss = ‖x − zH‖², rH = H (x − zH))
   instead of the (D,)-dim mean: a flip moves them by (±2 rH_k + G_kk,
-  ∓G[k]) with G = H Hᵀ precomputed once per row as a single GEMM. The
-  mean is reconstructed once (z @ H) on exit. Note the per-row G GEMM is
-  O(K² D) — a deliberate constants-for-big-O trade (one BLAS call beats
-  K sequential O(D) dots at our sizes; carrying G with rank-one
-  corrections would restore the strict O(K² + KD) row bound).
+  ∓G[k]) with G = H Hᵀ. The occupancy-adaptive row step (DESIGN.md §14)
+  CARRIES G across rows by the rank-two corrections matching each H move
+  and passes it in — the strict O(K² + KD) row bound. When ``G`` is not
+  supplied (legacy unpacked path, ``k_live_buckets="off"``), it is
+  recomputed here per row as a single O(K²D) GEMM — the historical
+  constants-for-big-O trade (DESIGN.md §12). The mean is reconstructed
+  once (z @ H) on exit.
 * **Packed-active iteration.** Inactive columns are exact no-ops of the
   recurrence (z_k = 0, flips masked), so the loop visits only the packed
   indices of ``active_m``, in increasing order — identical decisions to
   the full-K scan, with the trip count K₊ instead of K_max. On CPU this
   is a dynamic-bound while_loop; on TPU lockstep SIMD makes packing
   pointless, which is why the Pallas kernel keeps the full-K form.
+  Under occupancy-adaptive packing every input is already the K_live
+  block (K here = the bucket size, not K_max); nothing changes — the
+  recurrence is shape-generic and the block is ordered canonically.
 
 The float arithmetic differs from the ref form (incremental rss vs
 fresh residual dots), so decisions can differ from ref's at
@@ -44,11 +49,13 @@ def collapsed_row_flip_fast(
     active_m: Array,  # (K,)
     N: Array,         # ()
     inv2s2: Array,    # ()
+    G: Array | None = None,  # (K, K) = H Hᵀ, carried by the caller
 ) -> tuple[Array, Array, Array, Array]:
     """Returns (z, v, q, mean) — see collapsed_row_flip_ref for semantics."""
     K = z.shape[0]
     D = x_n.shape[0]
-    G = H @ H.T
+    if G is None:
+        G = H @ H.T
     r = x_n - mean
     rss = jnp.dot(r, r)
     rH = H @ r

@@ -13,6 +13,15 @@ All per-k selections use one-hot contractions instead of dynamic slicing
 the MXU/VPU). M is passed TRANSPOSED so the one-hot row contraction
 ``onehot @ Mt`` yields column M[:, k] — bitwise the same values the jnp
 oracle reads.
+
+Occupancy-adaptive packing (DESIGN.md §14): when the caller runs the
+packed row step, every operand here is already the K_live BLOCK — K
+below is the bucket size, not K_max, so the sequential recurrence runs
+K_live one-hot contractions instead of K_max and the VMEM-resident
+(M, H) footprint shrinks quadratically/linearly with the bucket. The
+kernel itself is shape-generic: the block is canonically ordered and
+free in-block slots are exact no-ops (act = 0), so no packing logic
+lives on this side.
 """
 from __future__ import annotations
 

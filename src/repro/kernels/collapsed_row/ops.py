@@ -13,6 +13,13 @@
 
 No jit here: the caller (``core/ibp/collapsed.py``) traces this inside an
 already-jitted row scan, and ``flavor`` is static by construction.
+
+Occupancy-adaptive packing (DESIGN.md §14): under ``k_live_buckets="on"``
+the caller passes the K_live BLOCK (all live columns + the lowest free
+slots, canonically ordered) rather than the K_max pad — every flavor is
+shape-generic, so K below is whichever width the caller packed to. The
+``packed`` flavor additionally accepts the carried ``G = H Hᵀ`` so its
+per-bit moves stay O(K) without the per-row O(K²D) GEMM.
 """
 from __future__ import annotations
 
@@ -27,9 +34,13 @@ FLAVORS = ("jnp", "packed", "pallas")
 
 def collapsed_row_flip(
     M, H, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2,
-    *, flavor: str = "jnp",
+    *, flavor: str = "jnp", G=None,
 ):
-    """Run the K-sequential bit-flip recurrence; returns (z, v, q, mean)."""
+    """Run the K-sequential bit-flip recurrence; returns (z, v, q, mean).
+
+    ``G`` (optional) is the caller-carried H Hᵀ; only the ``packed``
+    flavor consumes it (the mean-form flavors never materialize G).
+    """
     if flavor not in FLAVORS:
         raise ValueError(f"flavor={flavor!r} not in {FLAVORS}")
     if flavor == "pallas":
@@ -39,7 +50,7 @@ def collapsed_row_flip(
         )
     if flavor == "packed":
         return collapsed_row_flip_fast(
-            M, H, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2
+            M, H, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2, G=G
         )
     return collapsed_row_flip_ref(
         M, H, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2

@@ -12,6 +12,19 @@ Usage:
   # on CPU, force C*P host devices first:
   #   XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
   python -m repro.launch.mcmc --driver mesh --chains 2 --P 2
+
+Kernel knobs (all spec-validated; see DESIGN.md §12–§14):
+
+  --backend jnp|pallas            uncollapsed Z sweep implementation
+  --collapsed-backend ref|fast|pallas
+                                  tail collapsed row step (default fast)
+  --chol-refresh INT              fast-path exact-refactor cadence
+  --k-live-buckets on|off         occupancy-adaptive packing of the
+                                  collapsed carry (default on; off =
+                                  unpacked K_max carry, the pre-§14
+                                  behavior)
+  --sync staged|fused             master-sync collective schedule
+  --stale-sync INT                bounded-staleness passes (non-exact)
 """
 from __future__ import annotations
 
@@ -61,6 +74,13 @@ def main(argv=None):
     ap.add_argument("--chol-refresh", type=int, default=DEFAULT_REFRESH,
                     help="exact-refactorization cadence of the fast/pallas "
                          "collapsed backend (rows between refreshes)")
+    ap.add_argument("--k-live-buckets", default="on", choices=["on", "off"],
+                    help="occupancy-adaptive packing of the collapsed "
+                         "carry (DESIGN.md §14): on (default) runs the "
+                         "fast/pallas carry on the live K+ block (power-"
+                         "of-two buckets, G = HH^T carried rank-one); "
+                         "off keeps the unpacked K_max carry — exactly "
+                         "today's pre-packing behavior")
     ap.add_argument("--out", default="artifacts/mcmc_history.json")
     args = ap.parse_args(argv)
 
@@ -80,6 +100,7 @@ def main(argv=None):
         sync=args.sync, stale_sync=args.stale_sync,
         collapsed_backend=args.collapsed_backend,
         chol_refresh=args.chol_refresh,
+        k_live_buckets=args.k_live_buckets,
     )
     drv = MCMCDriver(X_train, spec, IBPHypers(), X_eval=X_eval)
 

@@ -13,7 +13,11 @@ Large-scale runnability contract (DESIGN.md §10):
 * capacity growth: if feature-slot overflow is detected (gs.overflow), the
   driver checkpoints and raises; a restart with a larger ``K_max`` pads the
   checkpointed feature axis with empty slots and resumes — growth is a
-  restart event, never a silent truncation.
+  restart event, never a silent truncation. The inverse is also a restart
+  event: restoring under a SMALLER ``K_max`` compacts live features (plus
+  the lowest free slots, the packed-carry block rule — DESIGN.md §14)
+  into the new capacity, so shrink-after-burn-in bounds every K_max-sized
+  buffer again; it refuses loudly if the live set does not fit.
 * straggler policy on real meshes: synchronous collectives absorb jitter; a
   dead pod is a restart from the latest checkpoint (same path as above). The
   paper's L sub-iterations amortize sync cost; ``stale_sync`` (bounded
@@ -93,6 +97,7 @@ class DriverConfig:
     overflow_every: int = 8    # overflow-detection cadence (host sync)
     collapsed_backend: str = "fast"  # "ref" | "fast" | "pallas" tail step
     chol_refresh: int = DEFAULT_CHOL_REFRESH  # "fast"/"pallas" cadence
+    k_live_buckets: str = "on"  # occupancy-adaptive packing (DESIGN.md §14)
 
     def to_spec(self) -> SamplerSpec:
         if self.driver not in DRIVERS:
@@ -104,6 +109,7 @@ class DriverConfig:
             sigma_a=self.sigma_a, L=self.L, backend=self.backend,
             collapsed_backend=self.collapsed_backend,
             chol_refresh=self.chol_refresh,
+            k_live_buckets=self.k_live_buckets,
             chains=chains, data=data, n_chains=self.n_chains,
             sync=self.sync, stale_sync=self.stale_sync,
             n_iters=self.n_iters, eval_every=self.eval_every,
@@ -154,15 +160,61 @@ class MCMCDriver:
             "meta": {"it": gs.it},
         }
 
+    def _shrink_features(self, gs: HybridGlobal, Zg, K_new: int):
+        """Shrink restart: compact a checkpoint's feature axis into a
+        SMALLER configured K_max (the capacity-growth path's inverse,
+        DESIGN.md §14). The kept columns are every live feature plus the
+        lowest-index free slots — the same block rule as the packed
+        collapsed carry — so the posterior state is untouched and only
+        dead slots are relabeled. After burn-in settles K⁺ well below a
+        grown K_max, this bounds every K_max-sized buffer (and the
+        packed scan's bucket ladder) again. Refuses loudly when the live
+        features do not fit: shrinking never silently truncates state.
+        Chain-batched checkpoints compact per chain (each chain has its
+        own live set).
+        """
+        act = np.asarray(gs.active)
+        Zg_h, A_h, pi_h = np.asarray(Zg), np.asarray(gs.A), np.asarray(gs.pi)
+        lead = act.shape[:-1]  # () chainless, (C,) chainful
+        act2 = act.reshape(-1, act.shape[-1])
+        cols = []
+        for c, a_row in enumerate(act2):
+            live = np.flatnonzero(a_row > 0.5)
+            if live.size > K_new:
+                who = f"chain {c} of the checkpoint" if lead else \
+                    "the checkpoint"
+                raise ValueError(
+                    f"cannot shrink to K_max={K_new}: {who} carries "
+                    f"{live.size} live features; restart with "
+                    f"K_max >= {live.size}"
+                )
+            free = np.flatnonzero(a_row <= 0.5)
+            cols.append(np.sort(np.concatenate(
+                [live, free[:K_new - live.size]])))
+        if lead:
+            C = len(cols)
+            Zg_h = np.stack([Zg_h[c][..., cols[c]] for c in range(C)])
+            A_h = np.stack([A_h[c][cols[c]] for c in range(C)])
+            pi_h = np.stack([pi_h[c][cols[c]] for c in range(C)])
+            act_h = np.stack([act2[c][cols[c]] for c in range(C)])
+        else:
+            Zg_h = Zg_h[..., cols[0]]
+            A_h, pi_h, act_h = A_h[cols[0]], pi_h[cols[0]], act[cols[0]]
+        gs = dataclasses.replace(
+            gs, A=jnp.asarray(A_h), pi=jnp.asarray(pi_h),
+            active=jnp.asarray(act_h),
+        )
+        return gs, jnp.asarray(Zg_h)
+
     def _from_ckpt(self, blob: dict) -> tuple[HybridGlobal, HybridShard]:
         spec = self.spec
         gs: HybridGlobal = blob["gs"]
         Zg = blob["Z_global"]
         K_ck = Zg.shape[-1]
         if K_ck > spec.K_max:
-            raise ValueError(
-                f"checkpoint K_max={K_ck} exceeds configured {spec.K_max}"
-            )
+            # shrink restart: compact live features into the smaller
+            # capacity instead of refusing (growth's inverse)
+            gs, Zg = self._shrink_features(gs, Zg, spec.K_max)
         if K_ck < spec.K_max:
             # capacity-growth restart: pad the feature axis with empty slots
             grow = spec.K_max - K_ck

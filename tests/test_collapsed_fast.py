@@ -2,19 +2,27 @@
 
 The ``backend="fast"`` row step carries (Lt, M, H) across the row scan via
 rank-one Cholesky up/downdates + Sherman–Morrison instead of refactorizing
-per row (DESIGN.md §12). These tests certify the speedup is not bought
+per row (DESIGN.md §12), and — under ``k_live_buckets="on"`` (default) —
+runs that carry PACKED to the live K⁺ bucket with G = HHᵀ carried
+rank-one (DESIGN.md §14). These tests certify the speedup is not bought
 with approximation:
 
-* full sweeps with the fast (and pallas) backend reproduce the O(K^3)
-  oracle's accept decisions on a fixed seed grid — same PRNG keys, same
-  chain. A tiny mismatch budget (<=2 bits per run) absorbs measure-zero
-  likelihood-boundary events where the two float paths may legitimately
-  round an accept differently; a broken carry diverges by hundreds of
-  bits within a sweep.
+* full sweeps with the fast (and pallas) backend — packed and unpacked —
+  reproduce the O(K^3) oracle's accept decisions on a fixed seed grid —
+  same PRNG keys, same chain. A tiny mismatch budget (<=2 bits per run)
+  absorbs measure-zero likelihood-boundary events where the two float
+  paths may legitimately round an accept differently; a broken carry
+  diverges by hundreds of bits within a sweep.
+* forced bucket-boundary crossings (births overflowing the block
+  mid-sweep -> repack up + resume; post-burn-in deaths -> repack down)
+  stay on the oracle's trajectory: bucket repack is a pure permutation +
+  refresh.
 * the drift monitor actually triggers refreshes when told to distrust the
   carry (tight tolerance) and stays quiet when the carry is healthy, and
   a monitor-repaired chain still matches the oracle.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -34,14 +42,21 @@ def data():
     return jnp.asarray(X)
 
 
-def _run(X, backend, refresh, sweeps, seed):
+def _run(X, backend, refresh, sweeps, seed, k_live="on", seg_log=None,
+         K_max=16, K_init=2, alpha=3.0, st=None):
     hyp = IBPHypers()
-    st = init_state(jax.random.key(seed), X.shape[0], X.shape[1],
-                    K_max=16, K_init=2)
+    if st is None:
+        st = init_state(jax.random.key(seed), X.shape[0], X.shape[1],
+                        K_max=K_max, K_init=K_init, alpha=alpha)
     for _ in range(sweeps):
         st = collapsed_sweep(st, X, hyp, backend=backend,
-                             refresh_every=refresh)
+                             refresh_every=refresh,
+                             k_live_buckets=k_live, seg_log=seg_log)
     return st
+
+
+def _mismatch(a, b):
+    return int(jnp.sum(a.Z * a.active[None, :] != b.Z * b.active[None, :]))
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2, 3])
@@ -49,19 +64,90 @@ def _run(X, backend, refresh, sweeps, seed):
 def test_fast_sweep_matches_oracle_sweep(data, seed, refresh):
     a = _run(data, "ref", refresh, sweeps=5, seed=seed)
     b = _run(data, "fast", refresh, sweeps=5, seed=seed)
-    mism = int(jnp.sum(a.Z * a.active[None, :] != b.Z * b.active[None, :]))
+    mism = _mismatch(a, b)
     assert mism <= MISMATCH_BUDGET, f"{mism} bits diverged (seed={seed})"
     assert np.isclose(float(a.sigma_x), float(b.sigma_x), rtol=1e-3)
     assert np.isclose(float(a.alpha), float(b.alpha), rtol=1e-3)
     assert int(a.active.sum()) == int(b.active.sum())
 
 
+@pytest.mark.parametrize("seed", [0, 2])
+def test_unpacked_fast_sweep_matches_oracle_sweep(data, seed):
+    """k_live_buckets="off" (the pre-packing carry) stays certified too."""
+    a = _run(data, "ref", 8, sweeps=5, seed=seed)
+    b = _run(data, "fast", 8, sweeps=5, seed=seed, k_live="off")
+    assert _mismatch(a, b) <= MISMATCH_BUDGET
+    assert np.isclose(float(a.sigma_x), float(b.sigma_x), rtol=1e-3)
+
+
 def test_pallas_sweep_matches_oracle_sweep(data):
     a = _run(data, "ref", 16, sweeps=3, seed=0)
     b = _run(data, "pallas", 16, sweeps=3, seed=0)
-    mism = int(jnp.sum(a.Z * a.active[None, :] != b.Z * b.active[None, :]))
+    mism = _mismatch(a, b)
     assert mism <= MISMATCH_BUDGET, f"{mism} bits diverged"
     assert np.isclose(float(a.sigma_x), float(b.sigma_x), rtol=1e-3)
+
+
+def test_packed_sweep_bitwise_across_bucket_growth():
+    """Cold start on rich data with a high alpha: births overflow the
+    8-bucket MID-SWEEP, forcing repack-up + resume — decisions must stay
+    on the oracle's trajectory through every crossing."""
+    rng = np.random.default_rng(0)
+    Zt = (rng.random((120, 12)) < 0.4).astype(np.float32)
+    At = rng.standard_normal((12, 24)).astype(np.float32) * 1.5
+    X = jnp.asarray(Zt @ At + 0.3 * rng.standard_normal(
+        (120, 24)).astype(np.float32))
+    a = _run(X, "ref", 8, sweeps=4, seed=0, K_max=32, K_init=1, alpha=8.0)
+    seg = []
+    b = _run(X, "fast", 8, sweeps=4, seed=0, K_max=32, K_init=1, alpha=8.0,
+             seg_log=seg)
+    assert _mismatch(a, b) <= MISMATCH_BUDGET, seg
+    buckets = {s[0] for s in seg}
+    assert len(buckets) >= 2, f"no bucket crossing exercised: {seg}"
+    assert any(row > 0 for _, row in seg), \
+        f"no MID-sweep overflow repack exercised: {seg}"
+    assert int(a.active.sum()) == int(b.active.sum())
+
+
+def test_packed_sweep_bitwise_across_bucket_shrink(data):
+    """Post-burn-in deaths drop occupancy below the bucket: the next
+    sweep repacks DOWN (reusing its boundary refactorization) and must
+    match the oracle from the same state."""
+    hyp = IBPHypers()
+    st = init_state(jax.random.key(2), data.shape[0], data.shape[1],
+                    K_max=32, K_init=12)
+    seg = []
+    for _ in range(2):
+        st = collapsed_sweep(st, data, hyp, backend="fast",
+                             refresh_every=8, seg_log=seg)
+    assert seg[0][0] == 16  # 12 live + headroom -> the 16 bucket
+    # deaths after burn-in: keep only the first 3 live columns (the
+    # driver-level shrink scenario), then compare ref vs packed from the
+    # SAME reduced state
+    act = np.asarray(st.active)
+    keep = np.zeros_like(act)
+    keep[np.flatnonzero(act > 0.5)[:3]] = 1.0
+    keep_j = jnp.asarray(keep)
+    st2 = dataclasses.replace(
+        st, Z=st.Z * keep_j[None, :], active=st.active * keep_j)
+    a = _run(data, "ref", 8, sweeps=2, seed=0, st=st2)
+    seg2 = []
+    b = _run(data, "fast", 8, sweeps=2, seed=0, seg_log=seg2, st=st2)
+    assert seg2[0][0] == 8, f"bucket did not shrink: {seg2}"
+    assert _mismatch(a, b) <= MISMATCH_BUDGET
+    assert int(a.active.sum()) == int(b.active.sum())
+
+
+def test_scan_pack_matches_ref_decisions(data):
+    """The in-jit packed entry (pack=True — the hybrid tail's route, full
+    width + carried G) reproduces the oracle scan's decisions."""
+    N = data.shape[0]
+    args = _scan_kwargs(data)
+    Zr, ar, *_ = collapsed_row_scan(*args, N=float(N), backend="ref")
+    Zp, ap, *_ = collapsed_row_scan(*args, N=float(N), backend="fast",
+                                    pack=True)
+    mism = int(jnp.sum(Zr * ar[None, :] != Zp * ap[None, :]))
+    assert mism <= MISMATCH_BUDGET, mism
 
 
 def _scan_kwargs(X, seed=0, K_max=12):
@@ -105,6 +191,22 @@ def test_drift_monitor_triggers_refresh_when_distrusted(data):
     *_, n_quiet = collapsed_row_scan(
         *args, N=float(N), backend="fast", refresh_every=10**6,
         drift_tol=1e-2)
+    assert int(n_quiet) <= 2, int(n_quiet)
+
+
+def test_drift_monitor_works_under_pack(data):
+    """The packed scan carries the same probe monitor (extended with the
+    G-consistency residual): distrusting the carry forces refreshes at
+    the probe cadence; a healthy packed carry stays quiet."""
+    N = data.shape[0]
+    args = _scan_kwargs(data)
+    *_, n_forced = collapsed_row_scan(
+        *args, N=float(N), backend="fast", refresh_every=10**6,
+        drift_tol=0.0, pack=True)
+    assert int(n_forced) >= N // PROBE_EVERY, int(n_forced)
+    *_, n_quiet = collapsed_row_scan(
+        *args, N=float(N), backend="fast", refresh_every=10**6,
+        drift_tol=1e-2, pack=True)
     assert int(n_quiet) <= 2, int(n_quiet)
 
 

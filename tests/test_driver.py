@@ -51,6 +51,40 @@ def test_kmax_overflow_checkpoints_then_grows(data, tmp_path):
     assert int(gs.active.sum()) >= 1
 
 
+def test_kmax_shrink_restart_compacts_features(data, tmp_path):
+    """Restoring a checkpoint under a SMALLER K_max compacts the live
+    features (plus lowest free slots — the packed-carry block rule) into
+    the new capacity and resumes; an impossible shrink refuses loudly
+    (DESIGN.md §14)."""
+    cfg = DriverConfig(P=3, K_max=16, K_tail=4, K_init=3, L=2, n_iters=6,
+                       ckpt_every=3, eval_every=1000,
+                       ckpt_dir=str(tmp_path))
+    gs, ss = MCMCDriver(data, cfg, IBPHypers()).run()
+    n_live = int(gs.active.sum())
+    assert 1 <= n_live, "need live features to exercise the shrink"
+    K_small = max(6, n_live)
+    if K_small >= cfg.K_max:
+        pytest.skip(f"chain kept {n_live} live features; nothing to shrink")
+    gs2, ss2 = MCMCDriver(
+        data, dataclasses.replace(cfg, K_max=K_small, n_iters=10),
+        IBPHypers(),
+    ).run()
+    assert ss2.Z.shape[-1] == K_small      # feature axis actually shrank
+    assert int(gs2.it) == 10               # and the run resumed + finished
+    assert int(gs2.active.sum()) >= 1
+    # refusing case: capacity below the live set must fail loudly, never
+    # silently truncate (restores the latest — post-shrink-run — ckpt)
+    n_live2 = int(gs2.active.sum())
+    if n_live2 >= 2:
+        with pytest.raises(ValueError, match="shrink"):
+            MCMCDriver(
+                data,
+                dataclasses.replace(
+                    cfg, K_max=n_live2 - 1, K_init=1, K_tail=2),
+                IBPHypers(),
+            ).run()
+
+
 def test_stale_sync_knob_runs_and_differs(data, tmp_path):
     """stale_sync > 0 interleaves sync-free sub-iteration passes: the run
     stays finite/sane but takes a different (non-exact) trajectory."""

@@ -149,6 +149,128 @@ def test_chol_rank1_downdate_canary_fires_on_pd_loss():
     assert not bool(ok)
 
 
+@given_or_params(max_examples=25, k_max=(3, 20), d=(2, 16), seed=(0, 10_000))
+def test_g_rank1_matches_recompute_under_masking(k_max, d, seed):
+    """The carried G = HHᵀ rank-two move equals the fresh recompute after
+    the matching rank-one H move — including exact zero padding on
+    inactive rows/cols (the packed carry's contract, DESIGN.md §14)."""
+    rng = np.random.default_rng(seed)
+    k_act = int(rng.integers(1, k_max + 1))
+    act = np.zeros(k_max, np.float64)
+    act[np.sort(rng.choice(k_max, size=k_act, replace=False))] = 1.0
+    H = rng.standard_normal((k_max, d)) * act[:, None]
+    G = H @ H.T
+    a = rng.standard_normal(k_max) * act  # callers mask the rank-one vector
+    b = rng.standard_normal(d)
+    got = np.asarray(ibm.g_rank1(
+        jnp.asarray(G, jnp.float32), jnp.asarray(H, jnp.float32),
+        jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+    ))
+    Hn = H + np.outer(a, b)
+    np.testing.assert_allclose(got, Hn @ Hn.T, rtol=2e-4, atol=2e-4)
+    # padding transparency: inactive rows/cols stay exactly zero
+    inact = act < 0.5
+    assert np.all(got[inact] == 0) and np.all(got[:, inact] == 0)
+    # symmetry is exact (the flip reads G rows as columns)
+    np.testing.assert_array_equal(got, got.T)
+
+
+def test_g_rank1_composes_with_sherman_morrison_move():
+    """End-to-end shape of the packed row step's remove-row move: the SM
+    update of H and the matching g_rank1 leave G consistent with H."""
+    rng = np.random.default_rng(1)
+    K, D = 9, 6
+    Z = (rng.random((40, K)) < 0.5).astype(np.float64)
+    X = rng.standard_normal((40, D))
+    W = Z.T @ Z + 0.7 * np.eye(K)
+    M = np.linalg.inv(W)
+    H = M @ (Z.T @ X)
+    G = H @ H.T
+    z = Z[7]
+    x = X[7]
+    w = M @ z
+    delta = 1.0 - z @ w
+    wd = w / delta
+    b = z @ H - x
+    H1 = H + np.outer(wd, b)
+    G1 = np.asarray(ibm.g_rank1(
+        jnp.asarray(G, jnp.float32), jnp.asarray(H, jnp.float32),
+        jnp.asarray(wd, jnp.float32), jnp.asarray(b, jnp.float32),
+    ))
+    np.testing.assert_allclose(G1, H1 @ H1.T, rtol=3e-4, atol=3e-4)
+
+
+def test_live_buckets_and_pick_bucket_policy():
+    assert ibm.live_buckets(64) == (8, 16, 32, 64)
+    assert ibm.live_buckets(32) == (8, 16, 32)
+    assert ibm.live_buckets(12) == (8, 12)
+    assert ibm.live_buckets(8) == (8,)
+    assert ibm.live_buckets(6) == (6,)
+    with pytest.raises(ValueError):
+        ibm.live_buckets(0)
+    b64 = ibm.live_buckets(64)
+    assert ibm.pick_bucket(b64, 2, 4) == 8
+    assert ibm.pick_bucket(b64, 8, 4) == 16   # headroom forces the next rung
+    assert ibm.pick_bucket(b64, 12, 4) == 16
+    assert ibm.pick_bucket(b64, 30, 4) == 64
+    assert ibm.pick_bucket(b64, 62, 4) == 64  # clamps at K_max
+    assert ibm.pick_bucket(b64, 64, 4) == 64
+
+
+@given_or_params(max_examples=25, k_max=(4, 24), seed=(0, 10_000))
+def test_block_select_properties(k_max, seed):
+    """The packed block = all live columns + lowest-index free slots,
+    ascending; min_out bounds every out-of-block (all-free) index."""
+    rng = np.random.default_rng(seed)
+    n_live = int(rng.integers(0, k_max + 1))
+    act = np.zeros(k_max, np.float32)
+    act[np.sort(rng.choice(k_max, size=n_live, replace=False))] = 1.0
+    B = int(rng.integers(max(1, n_live), k_max + 1))
+    cols, min_out = ibm.block_select(jnp.asarray(act), B)
+    cols, min_out = np.asarray(cols), int(min_out)
+    assert cols.shape == (B,)
+    assert np.all(np.diff(cols) > 0)  # strictly ascending => unique
+    live = set(np.flatnonzero(act > 0.5).tolist())
+    assert live <= set(cols.tolist())  # every live column is in the block
+    free_sorted = np.flatnonzero(act <= 0.5)
+    want_free = set(free_sorted[:B - n_live].tolist())
+    assert set(cols.tolist()) == live | want_free
+    outside = sorted(set(range(k_max)) - set(cols.tolist()))
+    if outside:
+        assert min_out == outside[0]
+        assert all(act[j] <= 0.5 for j in outside)  # out-of-block all free
+        assert all(f >= min_out for f in free_sorted[B - n_live:])
+    else:
+        assert min_out == k_max  # sentinel: block covers everything
+
+
+def test_chol_moves_commute_with_block_packing():
+    """With identity-decoupled padding, the packed principal block's
+    Cholesky factor equals the gathered rows/cols of the full factor,
+    and the rank-one moves commute with the gather — the property that
+    makes bucket repack a pure permutation + refresh (DESIGN.md §14)."""
+    rng = np.random.default_rng(3)
+    k_max, n = 14, 50
+    W, x, act = _padded_chol_case(n, k_max, 9, 3)
+    cols = np.flatnonzero(act > 0.5)
+    ix = np.ix_(cols, cols)
+    L = np.linalg.cholesky(W)
+    Lp = np.linalg.cholesky(W[ix])
+    np.testing.assert_allclose(L[ix], Lp, rtol=1e-12, atol=1e-12)
+    full = np.asarray(ibm.chol_rank1_update(
+        jnp.asarray(L, jnp.float32), jnp.asarray(x, jnp.float32)))
+    packed = np.asarray(ibm.chol_rank1_update(
+        jnp.asarray(Lp, jnp.float32), jnp.asarray(x[cols], jnp.float32)))
+    np.testing.assert_allclose(full[ix], packed, rtol=2e-5, atol=2e-5)
+    dn_full, ok_f = ibm.chol_rank1_downdate(
+        jnp.asarray(full), jnp.asarray(x, jnp.float32))
+    dn_packed, ok_p = ibm.chol_rank1_downdate(
+        jnp.asarray(packed), jnp.asarray(x[cols], jnp.float32))
+    assert bool(ok_f) and bool(ok_p)
+    np.testing.assert_allclose(np.asarray(dn_full)[ix],
+                               np.asarray(dn_packed), rtol=2e-4, atol=2e-4)
+
+
 def test_a_posterior_matches_conjugate_formula():
     rng = np.random.default_rng(1)
     N, D, K, K_max = 40, 6, 3, 8
