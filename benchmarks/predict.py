@@ -1,0 +1,194 @@
+"""Bank-scoring throughput: the (S × B)-batched jitted scorer vs the
+naive per-sample loop (DESIGN.md §15).
+
+What is measured, per (S, B, K) grid point:
+
+* ``batched`` — ONE ``predict.predictive_loglik`` dispatch scoring the
+  whole B-row workload against all S bank samples (the serving
+  subsystem's path: microbatch coalescing + ensemble batching).
+* ``naive_request`` — the serving counterfactual THE SUBSYSTEM
+  REPLACES: the workload arrives as ``B / req_rows`` requests, each
+  scored by a python loop over the S samples dispatching one jitted
+  per-sample scorer per (sample, request) — pre-§15 ensemble scoring
+  (S sequential ``heldout_joint_loglik``-style calls) at request
+  granularity, with no coalescing. This is the headline ``speedup``.
+* ``naive_monolithic`` — the same per-sample loop given the whole
+  B-row workload as one batch (generous to the baseline: it assumes a
+  batcher already exists). Reported alongside for transparency; on
+  few-core CPUs both sides of this comparison are flop-bound, so it
+  mostly measures BLAS shape efficiency, not the subsystem.
+
+Encode and impute are spot-checked at the required point so all three
+serving ops have a durable rows/s trajectory in ``BENCH_<date>.json``.
+
+Full run: ``python -m benchmarks.predict``; the ``benchmarks.run``
+harness calls this with CPU-sized grids and gates the smoke on the
+required point (S=32, B=256, K=64).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+REQUIRED = (32, 256, 64)  # (S, B, K) — the gated BENCH point
+
+
+def _t(fn, reps: int) -> float:
+    import jax
+
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def make_bank(S: int, K: int, D: int, seed: int = 0):
+    """Synthetic full-occupancy bank at feature width K (bucket == K)."""
+    from repro.core.ibp.predict import BankBuilder
+
+    rng = np.random.default_rng(seed)
+    bb = BankBuilder(K_max=K)
+    for s in range(S):
+        bb.add(rng.normal(size=(K, D)).astype(np.float32) * 0.5,
+               rng.uniform(0.1, 0.9, K), np.ones(K),
+               0.7, 1.0, 2.0, chain=0, it=s)
+    return bb.build()
+
+
+def bench_point(S: int, B: int, K: int, D: int, n_sweeps: int,
+                req_rows: int, reps: int, seed: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.ibp import predict
+
+    bank = make_bank(S, K, D, seed)
+    rng = np.random.default_rng(seed + 1)
+    X = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    key = jax.random.key(seed)
+    req = min(req_rows, B)
+
+    def batched():
+        return predict.predictive_loglik(bank, X, key, n_sweeps=n_sweeps)
+
+    def naive_request():
+        outs = []
+        for i in range(0, B, req):
+            outs.append(predict.predictive_loglik_naive(
+                bank, X[i:i + req], key, n_sweeps=n_sweeps))
+        return jnp.concatenate(outs)
+
+    def naive_monolithic():
+        return predict.predictive_loglik_naive(bank, X, key,
+                                               n_sweeps=n_sweeps)
+
+    # warm every jit cache entry first: steady-state serving throughput
+    for f in (batched, naive_request, naive_monolithic):
+        jax.block_until_ready(f())
+    t_b = _t(batched, reps)
+    t_r = _t(naive_request, max(1, reps - 1))
+    t_m = _t(naive_monolithic, max(1, reps - 1))
+    return {
+        "S": S, "B": B, "K": K, "D": D,
+        "n_sweeps": n_sweeps, "req_rows": req,
+        "batched_us": t_b * 1e6,
+        "naive_request_us": t_r * 1e6,
+        "naive_monolithic_us": t_m * 1e6,
+        "rows_per_s_batched": B / t_b,
+        "rows_per_s_naive_request": B / t_r,
+        "speedup": t_r / t_b,                # vs the serving counterfactual
+        "speedup_vs_monolithic": t_m / t_b,  # generous-baseline view
+    }
+
+
+def bench_ops_point(S: int, B: int, K: int, D: int, reps: int,
+                    seed: int = 0) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.ibp import predict
+
+    bank = make_bank(S, K, D, seed)
+    rng = np.random.default_rng(seed + 2)
+    X = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+    mask = jnp.asarray(rng.random((B, D)) > 0.25, jnp.float32)
+    key = jax.random.key(seed)
+    out = []
+    for op, fn in (
+        ("encode", lambda: predict.encode(bank, X, key)),
+        ("impute", lambda: predict.impute(bank, X, mask, key)),
+        ("anomaly", lambda: predict.anomaly_score(bank, X, key)),
+    ):
+        jax.block_until_ready(fn())
+        t = _t(fn, reps)
+        out.append({"op": op, "S": S, "B": B, "K": K, "D": D,
+                    "us_per_call": t * 1e6, "rows_per_s": B / t})
+    return out
+
+
+def main(argv=None) -> tuple[list[str], dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--Ss", type=int, nargs="+", default=[8, 32])
+    ap.add_argument("--Bs", type=int, nargs="+", default=[64, 256])
+    ap.add_argument("--Ks", type=int, nargs="+", default=[16, 64])
+    ap.add_argument("--D", type=int, default=64)
+    ap.add_argument("--n-sweeps", type=int, default=3)
+    ap.add_argument("--req-rows", type=int, default=8,
+                    help="request size of the naive request-granularity "
+                         "baseline")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--required-only", action="store_true",
+                    help="only the gated (S=32, B=256, K=64) point "
+                         "(CI smoke)")
+    args = ap.parse_args(argv)
+
+    grid = ([REQUIRED] if args.required_only else
+            sorted({(S, B, K) for S in args.Ss for B in args.Bs
+                    for K in args.Ks} | {REQUIRED}))
+    results, csv = [], []
+    for S, B, K in grid:
+        r = bench_point(S, B, K, args.D, args.n_sweeps, args.req_rows,
+                        args.reps)
+        results.append(r)
+        print(f"S={S:3d} B={B:4d} K={K:3d}: batched "
+              f"{r['batched_us']/1e3:7.1f}ms "
+              f"({r['rows_per_s_batched']:6.0f} rows/s)  naive/request "
+              f"{r['naive_request_us']/1e3:7.1f}ms -> {r['speedup']:.1f}x "
+              f"(monolithic {r['speedup_vs_monolithic']:.2f}x)", flush=True)
+        csv.append(
+            f"predict__loglik_S{S}_B{B}_K{K},{r['batched_us']:.0f},"
+            f"speedup={r['speedup']:.2f};rows_per_s="
+            f"{r['rows_per_s_batched']:.0f}"
+        )
+    ops = bench_ops_point(*REQUIRED, args.D, args.reps)
+    for r in ops:
+        print(f"op={r['op']:8s} S={r['S']} B={r['B']} K={r['K']}: "
+              f"{r['us_per_call']/1e3:7.1f}ms "
+              f"({r['rows_per_s']:6.0f} rows/s)", flush=True)
+        csv.append(f"predict__{r['op']}_S{r['S']}_B{r['B']}_K{r['K']},"
+                   f"{r['us_per_call']:.0f},"
+                   f"rows_per_s={r['rows_per_s']:.0f}")
+    payload = {
+        "predict_serving": {
+            "config": {"D": args.D, "n_sweeps": args.n_sweeps,
+                       "req_rows": args.req_rows,
+                       "naive": "per-sample loop at request granularity "
+                                "(pre-§15 ensemble scoring, no "
+                                "coalescing); *_monolithic = same loop "
+                                "fed the whole batch"},
+            "results": results,
+            "ops": ops,
+        }
+    }
+    return csv, payload
+
+
+if __name__ == "__main__":
+    lines, _ = main()
+    print("name,us_per_call,derived")
+    for l in lines:
+        print(l)

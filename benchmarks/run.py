@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import argparse
 import datetime
-import json
 import os
 import sys
 import time
@@ -28,6 +27,10 @@ import traceback
 
 SMOKE_MIN_SPEEDUP = 2.0  # fast vs ref collapsed sweep at K=64, CPU
 SMOKE_MIN_PACKED_SPEEDUP = 1.5  # packed vs unpacked fast at K=64/K+=8, CPU
+SMOKE_MIN_SERVE_SPEEDUP = 3.0  # batched bank scoring vs the naive
+#                                per-sample request loop at S=32/B=256/K=64
+#                                (full runs measure ~5-8x; the gate leaves
+#                                CI noise headroom)
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -36,11 +39,16 @@ def _section(title: str):
 
 
 def _write_bench_json(payload: dict) -> str:
+    # merge, don't clobber: serve_ibp read-modify-writes its serving_loop
+    # section into the SAME date-keyed file — sections this run did not
+    # produce must survive (two writers, one durable trajectory; the
+    # tolerant atomic merge is shared via checkpoint.update_json)
+    from repro.checkpoint import update_json
+
     path = os.path.join(
         REPO_ROOT, f"BENCH_{datetime.date.today().isoformat()}.json"
     )
-    with open(path, "w") as fh:
-        json.dump(payload, fh, indent=1)
+    update_json(path, lambda merged: {**merged, **payload})
     print(f"perf trajectory -> {path}", flush=True)
     return path
 
@@ -54,10 +62,11 @@ def main(argv=None) -> int:
                          "sizes, enforce the fast>=2x ref gate at K=64")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of "
-                         "fig1,fig2,kernels,collapsed,scaling,roofline")
+                         "fig1,fig2,kernels,collapsed,predict,scaling,"
+                         "roofline")
     args = ap.parse_args(argv)
     if args.smoke and not args.only:
-        args.only = "kernels,collapsed"
+        args.only = "kernels,collapsed,predict"
         args.quick = True
     only = set(filter(None, args.only.split(",")))
 
@@ -133,6 +142,33 @@ def main(argv=None) -> int:
             failures.append("collapsed")
             traceback.print_exc()
 
+    if want("predict"):
+        _section("predict: (S x B)-batched bank scoring vs naive loop")
+        from benchmarks import predict as predict_bench
+        try:
+            pr_args = (["--required-only", "--reps", "2"] if args.smoke
+                       else (["--Ss", "8", "--Bs", "64", "--Ks", "16",
+                              "--reps", "2"] if args.quick else []))
+            lines, payload = predict_bench.main(pr_args)
+            csv += lines
+            bench.update(payload)
+            if args.smoke:
+                req = [r for r in payload["predict_serving"]["results"]
+                       if (r["S"], r["B"], r["K"]) == predict_bench.REQUIRED]
+                if not req:  # fail closed, like the collapsed gates
+                    failures.append(
+                        "serving perf gate: no S=32/B=256/K=64 row")
+                elif req[0]["speedup"] < SMOKE_MIN_SERVE_SPEEDUP:
+                    failures.append(
+                        f"serving perf gate: batched bank scoring is "
+                        f"{req[0]['speedup']:.2f}x the naive per-sample "
+                        f"request loop at S=32/B=256/K=64 "
+                        f"(< {SMOKE_MIN_SERVE_SPEEDUP}x)"
+                    )
+        except Exception:
+            failures.append("predict")
+            traceback.print_exc()
+
     if want("fig1"):
         _section("fig1: convergence vs wall-clock (collapsed vs hybrid P)")
         from benchmarks import fig1_convergence
@@ -191,7 +227,8 @@ def main(argv=None) -> int:
     print("name,us_per_call,derived")
     for line in csv:
         print(line)
-    if "collapsed_sweep" in bench or "kernels" in bench:
+    if ("collapsed_sweep" in bench or "kernels" in bench
+            or "predict_serving" in bench):
         _write_bench_json(bench)
     if failures:
         print(f"\nFAILED sections: {failures}", file=sys.stderr)

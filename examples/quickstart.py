@@ -6,7 +6,7 @@ paper's hybrid parallel MCMC, in ~30 seconds on CPU.
 import jax
 import jax.numpy as jnp
 
-from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
+from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler, predict
 from repro.core.ibp.diagnostics import train_joint_loglik
 from repro.data import cambridge_data
 
@@ -21,10 +21,15 @@ spec = SamplerSpec(P=P, K_max=16, K_tail=6, K_init=3, L=5)
 sampler = build_sampler(spec, IBPHypers(), X)
 
 # 3. init + run the hybrid sampler: uncollapsed sweeps on instantiated
-#    features everywhere, collapsed tail births on one rotating shard p'
+#    features everywhere, collapsed tail births on one rotating shard p'.
+#    Past burn-in, harvest posterior samples into a SampleBank — the
+#    compact ensemble the predictive serving ops run on (DESIGN.md §15)
 gs, ss = sampler.init(jax.random.key(0))
+bank_builder = predict.BankBuilder(spec.K_max)
 for it in range(60):
     gs, ss = sampler.step(gs, ss)
+    if (it + 1) > 30 and (it + 1) % 5 == 0:
+        bank_builder.add_state(gs, it=it + 1)
     if (it + 1) % 20 == 0:
         Z = ss.Z.reshape(N, -1)
         ll = train_joint_loglik(jnp.asarray(X), Z, gs.A, gs.pi, gs.active,
@@ -40,4 +45,23 @@ A0 = gs.A[jnp.argmax(jnp.sum(ss.Z.reshape(N, -1), axis=0) * gs.active)]
 for row in jnp.round(A0.reshape(6, 6), 1).tolist():
     print("  " + " ".join(f"{v:+.1f}" for v in row))
 assert 3 <= K <= 8, "sampler should find ~4 features"
+
+# 4. score NEW data with the harvested ensemble — no sampler needed
+#    (banks save/load as self-describing npz: bank.save(path)):
+#    per-row predictive log-likelihood (logsumexp mixture over samples),
+#    posterior feature probabilities, and imputation of missing dims
+bank = bank_builder.build()
+X_new, _, _ = cambridge_data(N=8, sigma_n=0.5, seed=1)
+key = jax.random.key(99)
+ll = predict.predictive_loglik(bank, X_new, key)          # (8,) rows
+probs = predict.encode(bank, X_new, key)                  # (S, 8, K)
+mask = jnp.ones_like(jnp.asarray(X_new)).at[:, 18:].set(0.0)
+filled = predict.impute(bank, jnp.asarray(X_new) * mask, mask, key)
+print(f"\nbank: S={bank.S} samples at feature bucket K={bank.K}")
+print(f"predictive ll of 8 new rows: {float(ll.sum()):.1f} "
+      f"(per row {float(ll.mean()):.1f})")
+print(f"mean active features per new row: "
+      f"{float(probs.mean(0).sum(-1).mean()):.1f}")
+err = float(jnp.mean((filled[:, 18:] - jnp.asarray(X_new)[:, 18:]) ** 2))
+print(f"imputation MSE on the masked half: {err:.3f}")
 print("OK")

@@ -1,3 +1,19 @@
-from .npz import latest_step, load_pytree, restore, save_pytree
+from .npz import (
+    latest_step,
+    load_arrays,
+    load_pytree,
+    restore,
+    save_arrays,
+    save_pytree,
+    update_json,
+)
 
-__all__ = ["save_pytree", "load_pytree", "restore", "latest_step"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "restore",
+    "latest_step",
+    "save_arrays",
+    "load_arrays",
+    "update_json",
+]

@@ -50,6 +50,52 @@ def save_pytree(path: str, tree: Any, step: int, keep: int = 3) -> str:
     return fname
 
 
+def save_arrays(path: str, arrays: dict[str, np.ndarray]) -> str:
+    """Atomic SELF-DESCRIBING npz: named arrays, loadable with no
+    template pytree. The persistence layer of artifacts that must be
+    restorable independently of sampler state — the posterior
+    ``SampleBank`` in particular (DESIGN.md §15). Same tmp + os.replace
+    crash-safety as ``save_pytree``."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as fh:
+        np.savez(fh, **{k: np.asarray(v) for k, v in arrays.items()})
+    os.replace(tmp, path)
+    return path
+
+
+def load_arrays(path: str) -> dict[str, np.ndarray]:
+    """Load a ``save_arrays`` npz back into a name -> array dict."""
+    with np.load(path) as data:
+        return {k: data[k] for k in data.files}
+
+
+def update_json(path: str, update) -> str:
+    """Tolerant read-modify-write of a small JSON artifact (the durable
+    BENCH_<date>.json perf trajectory, which has two writers:
+    ``benchmarks/run.py`` and ``repro.launch.serve_ibp``). A corrupt or
+    half-written file reads as {} instead of crashing the caller, and
+    the write is tmp + os.replace — the same crash contract as the npz
+    checkpoints. ``update`` maps the current dict to the new one."""
+    import json
+
+    data: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                data = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    data = update(data)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(data, fh, indent=1)
+    os.replace(tmp, path)
+    return path
+
+
 def all_steps(path: str) -> list[int]:
     if not os.path.isdir(path):
         return []

@@ -17,6 +17,8 @@ from .api import (
     build_sampler,
 )
 from . import convergence
+from . import predict
+from .predict import BankBuilder, SampleBank
 
 __all__ = [
     "IBPHypers",
@@ -37,4 +39,7 @@ __all__ = [
     "SamplerSpec",
     "build_sampler",
     "convergence",
+    "predict",
+    "SampleBank",
+    "BankBuilder",
 ]

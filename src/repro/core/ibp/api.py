@@ -104,6 +104,13 @@ class SamplerSpec:
     ckpt_dir: str = "artifacts/ckpt/ibp"
     overflow_every: int = 8    # overflow-detection cadence (host sync)
     seed: int = 0
+    # ---- posterior-predictive harvest (SampleBank, DESIGN.md §15)
+    harvest_every: int = 0     # harvest a posterior sample every this many
+    #                            iterations (0 = off); chain-batched runs
+    #                            harvest one sample per chain
+    harvest_burn: float = 0.5  # fraction of the run discarded as burn-in
+    #                            before harvesting starts
+    bank_path: str = ""        # SampleBank npz ("" = <ckpt_dir>/bank.npz)
 
     def __post_init__(self):
         def bad(msg: str):
@@ -153,6 +160,12 @@ class SamplerSpec:
         if self.n_iters < 1 or self.eval_every < 1 or self.ckpt_every < 1:
             bad(f"n_iters={self.n_iters}, eval_every={self.eval_every}, "
                 f"ckpt_every={self.ckpt_every} must all be >= 1")
+        if self.harvest_every < 0:
+            bad(f"harvest_every={self.harvest_every} must be >= 0 "
+                f"(0 disables harvesting)")
+        if not 0.0 <= self.harvest_burn < 1.0:
+            bad(f"harvest_burn={self.harvest_burn} must be in [0, 1) — a "
+                f"burn fraction of the run, not an iteration count")
 
     # ---- derived views ----------------------------------------------------
     @property

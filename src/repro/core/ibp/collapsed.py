@@ -75,6 +75,11 @@ DEFAULT_DRIFT_TOL = 1e-2  # probe-residual threshold forcing an early refresh
 PROBE_EVERY = 4         # drift-probe cadence within the refresh window
 K_LIVE_MODES = ("on", "off")  # occupancy-adaptive packing knob values
 PACK_HEADROOM = J_MAX   # free in-block slots guaranteed at (re)pack time
+U_CHUNK_ROWS = 512      # packed-scan uniform buffer rows held on device:
+#                         the hoisted per-row uniforms are generated
+#                         block-wise at this granularity instead of all
+#                         (N, K_max) at once, so long serial scans
+#                         (harvest runs) keep O(U_CHUNK_ROWS * K) memory
 
 
 def _log_poisson(j: Array, lam: Array) -> Array:
@@ -441,14 +446,18 @@ class _PackedCarry(NamedTuple):
     since: Array
     n_refresh: Array
     ovf: Array        # () bool — birth did not fit the packed block
+    ubuf: Array       # (u_chunk, K_canonical) — current uniform block
+    ubase: Array      # () int32 — first row-offset covered by ``ubuf``
 
 
 @partial(jax.jit, static_argnames=("N", "birth", "B", "refresh_every",
-                                   "drift_tol", "flip_flavor"))
+                                   "drift_tol", "flip_flavor",
+                                   "u_chunk_rows"))
 def _packed_scan(
     Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa, start_row, *,
     N: float, birth: str, B: int, refresh_every: int,
     drift_tol: float = DEFAULT_DRIFT_TOL, flip_flavor: str = "packed",
+    u_chunk_rows: int = U_CHUNK_ROWS,
 ):
     """Packed row scan from ``start_row`` to the end of X — or to the
     first birth that does not fit the K_live block.
@@ -487,29 +496,59 @@ def _packed_scan(
     inv2s2 = 0.5 / (sx**2)
 
     # ---- hoist the oracle's per-row PRNG out of the serial loop: the
-    # split chain and the (K_canonical,)-wide uniform draws are batched
-    # into one scan + one vmapped threefry — bitwise the same stream,
+    # split chain is batched into one scan — bitwise the same stream,
     # but the K-wide generation no longer serializes with the row steps.
     # The chain is POSITIONAL in rows-processed-this-segment (the oracle
     # splits once per processed row, regardless of row index), so every
     # lookup below is relative to start_row; chain_data[j] = the carry
     # key after j processed rows, making the resume-after-overflow key
     # chain_data[ovf_row - start_row].
+    #
+    # The (K_canonical,)-wide uniform EXPANSION is chunked: only
+    # ``u_chunk`` rows of logit-uniforms are resident at a time, refilled
+    # inside the loop when the row index crosses the block (positional
+    # key chain => block-wise generation is bitwise identical to the
+    # all-rows hoist). The O(n_rows) buffers that remain — the key chain
+    # and the per-row dish keys — are a few words per row, so very large
+    # serial N no longer materializes an (N, K_max) buffer.
+    #
+    # ``chunked`` is a TRACE-TIME branch: when one block covers the scan
+    # the in-loop refill cond is not traced at all. That matters beyond
+    # tidiness — under a chain-vmapped caller lax.cond lowers to select
+    # (both branches execute every iteration), which would turn the
+    # amortized refill into a full block generation PER ROW. In-jit /
+    # vmapped callers (the hybrid tail) therefore pass
+    # u_chunk_rows >= n_rows (their K_canonical is the small K_tail, so
+    # the full hoist is cheap); only the host-dispatched serial sweep —
+    # never vmapped — takes the chunked path.
     sr = jnp.asarray(start_row, jnp.int32)
+    u_chunk = min(u_chunk_rows, n_rows)
+    chunked = u_chunk < n_rows
+    j_cap = jnp.asarray(n_rows - u_chunk, jnp.int32)
 
     def key_step(k, _):
         k2, kbits, kdish, _kslot = jax.random.split(k, 4)
-        return k2, (jax.random.key_data(k2), kbits, kdish)
+        return k2, (jax.random.key_data(k2), jax.random.key_data(kbits),
+                    kdish)
 
-    _, (chain_next, kbits_all, kdish_all) = jax.lax.scan(
+    _, (chain_next, kbits_data, kdish_all) = jax.lax.scan(
         key_step, key, None, length=n_rows)
     chain_data = jnp.concatenate(
         [jax.random.key_data(key)[None], chain_next])
-    uu = jax.vmap(
-        lambda k: jax.random.uniform(k, (K_can,), dtype=X.dtype)
-    )(kbits_all)
-    uu = jnp.clip(uu, 1e-7, 1.0 - 1e-7)
-    u_all = jnp.log(uu) - jnp.log1p(-uu)
+
+    def gen_u(base):
+        """Logit-uniform block for row offsets [base, base + u_chunk)."""
+        kb = jax.lax.dynamic_slice_in_dim(kbits_data, base, u_chunk, 0)
+        uu = jax.vmap(
+            lambda kd: jax.random.uniform(
+                jax.random.wrap_key_data(kd), (K_can,), dtype=X.dtype)
+        )(kb)
+        uu = jnp.clip(uu, 1e-7, 1.0 - 1e-7)
+        return jnp.log(uu) - jnp.log1p(-uu)
+
+    # single-block case: the whole buffer is a loop-closure constant and
+    # the carry's ubuf is an empty placeholder (cond-free hot loop)
+    u_all = None if chunked else gen_u(jnp.zeros((), jnp.int32))
 
     def body(c: _PackedCarry) -> _PackedCarry:
         n = c.n
@@ -584,9 +623,24 @@ def _packed_scan(
         n_refresh = c.n_refresh + need.astype(c.n_refresh.dtype)
 
         # ---- bit flips: the oracle's PRNG stream (canonical-width
-        # uniforms, precomputed above, gathered onto the block)
-        u = u_all[n - sr][cols]
-        kdish = kdish_all[n - sr]
+        # uniforms, generated block-wise, gathered onto the block). The
+        # refill is deterministic in the row offset, so an overflow
+        # retry re-reads the identical draws even across the refill.
+        j = n - sr
+        if chunked:
+            def refill(_):
+                base = jnp.minimum((j // u_chunk) * u_chunk, j_cap)
+                return gen_u(base), base
+
+            ubuf, ubase = jax.lax.cond(
+                j >= c.ubase + u_chunk, refill,
+                lambda _: (c.ubuf, c.ubase), None,
+            )
+            u = ubuf[j - ubase][cols]
+        else:
+            ubuf, ubase = c.ubuf, c.ubase
+            u = u_all[j][cols]
+        kdish = kdish_all[j]
 
         def vqm_closed(_):
             gd = gamma / delta_s
@@ -691,6 +745,9 @@ def _packed_scan(
             since=sel(c.since, since),
             n_refresh=sel(c.n_refresh, n_refresh),
             ovf=birth_ovf,
+            # no sel(): the refill is positional in j, and an overflow
+            # exits the loop — the host resumes with a fresh scan call
+            ubuf=ubuf, ubase=ubase,
         )
 
     carry0 = _PackedCarry(
@@ -698,6 +755,9 @@ def _packed_scan(
         ZtZ=ZtZ_p, ZtX=ZtX_p, m=m_p, Lt=Lt0, M=M0, H=H0, G=G0,
         since=jnp.zeros((), jnp.int32), n_refresh=jnp.zeros((), jnp.int32),
         ovf=jnp.zeros((), jnp.bool_),
+        ubuf=(gen_u(jnp.zeros((), jnp.int32)) if chunked
+              else jnp.zeros((0, K_can), X.dtype)),
+        ubase=jnp.zeros((), jnp.int32),
     )
     out = jax.lax.while_loop(
         lambda c: (c.n < n_rows) & (~c.ovf), body, carry0
@@ -760,12 +820,18 @@ def collapsed_row_scan(
         Z, active, ZtZ, ZtX, m = carry[:5]
         return Z, active, ZtZ, ZtX, m, jnp.zeros((), jnp.int32)
     if pack:
-        # full-width block: overflow is impossible (no out-of-block slots)
+        # full-width block: overflow is impossible (no out-of-block slots).
+        # u_chunk_rows=n_rows disables the in-loop uniform refill: this
+        # entry runs inside jit and may be chain-vmapped (the hybrid
+        # tail), where a lax.cond refill would lower to select and
+        # regenerate a whole block per row — and its K_canonical is the
+        # small K_tail, so the full (n_rows, K) hoist is cheap anyway
         Z, active, ZtZ, ZtX, m, n_refresh, _, _ = _packed_scan(
             Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa, 0,
             N=N, birth=birth, B=Z.shape[1], refresh_every=refresh_every,
             drift_tol=drift_tol,
             flip_flavor="pallas" if backend == "pallas" else "packed",
+            u_chunk_rows=n_rows,
         )
         return Z, active, ZtZ, ZtX, m, n_refresh
     ratio = (sx / sa) ** 2

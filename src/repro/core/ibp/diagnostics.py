@@ -1,54 +1,22 @@
 """Evaluation: joint log-likelihood on held-out data (paper Fig. 1) and
-posterior feature recovery (paper Fig. 2)."""
+posterior feature recovery (paper Fig. 2).
+
+The joint log-likelihood metrics were deduped onto the predictive
+serving subsystem (DESIGN.md §15): ``heldout_joint_loglik`` and
+``train_joint_loglik`` below are re-exports of the canonical
+implementations in ``repro.core.ibp.predict`` (same signatures, same
+PRNG stream, residual scoring through the ``gaussian_sse`` kernel
+family). For ensemble scoring over a harvested ``SampleBank`` —
+encode / impute / anomaly / the logsumexp mixture estimator — use
+``predict`` directly.
+"""
 from __future__ import annotations
 
-from functools import partial
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import math as ibm
-from .sweeps import uncollapsed_sweep
+from .predict import heldout_joint_loglik, train_joint_loglik  # noqa: F401
 
-Array = jax.Array
-
-
-@partial(jax.jit, static_argnames=("n_sweeps",))
-def heldout_joint_loglik(
-    X_test: Array,
-    A: Array,
-    pi: Array,
-    active: Array,
-    sigma_x: Array,
-    key: Array,
-    n_sweeps: int = 3,
-) -> Array:
-    """log P(X_test, Z_test | A, pi, sigma) with Z_test imputed by short
-    uncollapsed Gibbs given the posterior draw (paper's Fig. 1 metric:
-    'joint log likelihood of P(X,Z) on a held-out evaluation set')."""
-    N, D = X_test.shape
-    K = A.shape[0]
-    Z = jnp.zeros((N, K), X_test.dtype)
-
-    def body(Z, l):
-        Z = uncollapsed_sweep(
-            X_test, Z, A, pi, active, sigma_x, jax.random.fold_in(key, l)
-        )
-        return Z, None
-
-    Z, _ = jax.lax.scan(body, Z, jnp.arange(n_sweeps))
-    ll = ibm.uncollapsed_loglik(X_test, Z * active[None, :], A, sigma_x)
-    ll = ll + ibm.z_prior_loglik(Z, pi, active)
-    return ll
-
-
-def train_joint_loglik(
-    X: Array, Z: Array, A: Array, pi: Array, active: Array, sigma_x: Array
-) -> Array:
-    """log P(X, Z | A, pi, sigma) on the training rows (for monitoring)."""
-    ll = ibm.uncollapsed_loglik(X, Z * active[None, :], A, sigma_x)
-    return ll + ibm.z_prior_loglik(Z, pi, active)
+__all__ = ["heldout_joint_loglik", "train_joint_loglik", "match_features"]
 
 
 def match_features(A_est: np.ndarray, A_true: np.ndarray) -> tuple[np.ndarray, float]:

@@ -25,6 +25,16 @@ Kernel knobs (all spec-validated; see DESIGN.md §12–§14):
                                   behavior)
   --sync staged|fused             master-sync collective schedule
   --stale-sync INT                bounded-staleness passes (non-exact)
+
+Posterior-predictive harvest (DESIGN.md §15):
+
+  --harvest-every INT             harvest one posterior sample (per chain)
+                                  into the SampleBank every this many
+                                  iterations (0 = off)
+  --harvest-burn FLOAT            fraction of the run discarded before
+                                  harvesting starts (default 0.5)
+  --bank-path PATH                bank npz (default <ckpt-dir>/bank.npz);
+                                  serve it with repro.launch.serve_ibp
 """
 from __future__ import annotations
 
@@ -81,6 +91,16 @@ def main(argv=None):
                          "of-two buckets, G = HH^T carried rank-one); "
                          "off keeps the unpacked K_max carry — exactly "
                          "today's pre-packing behavior")
+    ap.add_argument("--harvest-every", type=int, default=0,
+                    help="SampleBank harvest cadence in iterations "
+                         "(0 = off); chain-batched drivers harvest one "
+                         "sample per chain (DESIGN.md §15)")
+    ap.add_argument("--harvest-burn", type=float, default=0.5,
+                    help="fraction of the run discarded as burn-in "
+                         "before harvesting starts")
+    ap.add_argument("--bank-path", default="",
+                    help="SampleBank npz path (default: "
+                         "<ckpt-dir>/bank.npz)")
     ap.add_argument("--out", default="artifacts/mcmc_history.json")
     args = ap.parse_args(argv)
 
@@ -101,6 +121,9 @@ def main(argv=None):
         collapsed_backend=args.collapsed_backend,
         chol_refresh=args.chol_refresh,
         k_live_buckets=args.k_live_buckets,
+        harvest_every=args.harvest_every,
+        harvest_burn=args.harvest_burn,
+        bank_path=args.bank_path,
     )
     drv = MCMCDriver(X_train, spec, IBPHypers(), X_eval=X_eval)
 
@@ -124,6 +147,10 @@ def main(argv=None):
         # bare NaN is not valid JSON — emit null instead
         json.dump(_json_safe(drv.history), fh, indent=1)
     print(f"history -> {args.out}")
+    if drv.bank_builder is not None and len(drv.bank_builder):
+        # already persisted by the driver's final-iteration checkpoint
+        print(f"sample bank ({len(drv.bank_builder)} samples) -> "
+              f"{drv.bank_path}")
 
 
 def _json_safe(obj):

@@ -52,6 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import os
+
 from repro.checkpoint import restore, save_pytree
 from repro.core.ibp import IBPHypers, SamplerSpec, build_sampler
 from repro.core.ibp import convergence
@@ -60,7 +62,12 @@ from repro.core.ibp.collapsed import (
     DEFAULT_REFRESH as DEFAULT_CHOL_REFRESH,
 )
 from repro.core.ibp.hybrid import HybridGlobal, HybridShard
-from repro.core.ibp.diagnostics import heldout_joint_loglik, train_joint_loglik
+from repro.core.ibp.predict import (
+    BankBuilder,
+    SampleBank,
+    heldout_joint_loglik,
+    train_joint_loglik,
+)
 
 BACKENDS = tuple(DRIVERS)  # historical name for the driver grid
 
@@ -98,6 +105,9 @@ class DriverConfig:
     collapsed_backend: str = "fast"  # "ref" | "fast" | "pallas" tail step
     chol_refresh: int = DEFAULT_CHOL_REFRESH  # "fast"/"pallas" cadence
     k_live_buckets: str = "on"  # occupancy-adaptive packing (DESIGN.md §14)
+    harvest_every: int = 0     # SampleBank harvest cadence (0 = off, §15)
+    harvest_burn: float = 0.5  # burn-in fraction before harvesting
+    bank_path: str = ""        # bank npz ("" = <ckpt_dir>/bank.npz)
 
     def to_spec(self) -> SamplerSpec:
         if self.driver not in DRIVERS:
@@ -115,6 +125,8 @@ class DriverConfig:
             n_iters=self.n_iters, eval_every=self.eval_every,
             ckpt_every=self.ckpt_every, ckpt_dir=self.ckpt_dir,
             overflow_every=self.overflow_every, seed=self.seed,
+            harvest_every=self.harvest_every,
+            harvest_burn=self.harvest_burn, bank_path=self.bank_path,
         )
 
 
@@ -147,6 +159,14 @@ class MCMCDriver:
         # material for split-R-hat / ESS in eval records
         self.trace: dict[str, list[np.ndarray]] = {"sigma_x": [], "K": []}
         self._chain_axis = self.sampler.chain_axis
+        # posterior-predictive harvest (DESIGN.md §15): the builder
+        # accumulates post-burn-in samples host-side at harvest cadence;
+        # the built bank is persisted NEXT TO the checkpoints but is a
+        # separate, self-describing artifact — serving restores it with
+        # no sampler state at all (core/ibp/predict.py)
+        self.bank_builder = (BankBuilder(spec.K_max)
+                             if spec.harvest_every > 0 else None)
+        self._bank: SampleBank | None = None
 
     # ---- state <-> checkpoint layout (global Z for elastic resharding) ----
     def _to_ckpt(self, gs: HybridGlobal, ss: HybridShard) -> dict:
@@ -268,6 +288,31 @@ class MCMCDriver:
         gs, st = self.sampler.init()
         return self._to_ckpt(gs, self.sampler.to_canonical(st))
 
+    # ---- posterior-predictive harvest (DESIGN.md §15) ---------------------
+    @property
+    def bank_path(self) -> str:
+        return self.spec.bank_path or os.path.join(self.spec.ckpt_dir,
+                                                   "bank.npz")
+
+    @property
+    def bank(self) -> SampleBank | None:
+        """The harvested ensemble as a built SampleBank (None before the
+        first harvest). Rebuilt lazily when new samples arrived."""
+        b = self.bank_builder
+        if b is None or len(b) == 0:
+            return self._bank
+        if self._bank is None or self._bank.S != len(b):
+            self._bank = b.build()
+        return self._bank
+
+    def save_bank(self) -> str | None:
+        """Build + persist the bank (npz, restorable with no sampler
+        state). Returns the path, or None if nothing was harvested."""
+        bank = self.bank
+        if bank is None:
+            return None
+        return bank.save(self.bank_path)
+
     # ---- main loop --------------------------------------------------------
     def run(self, n_iters: int | None = None,
             on_eval: Callable[[dict], None] | None = None,
@@ -281,9 +326,30 @@ class MCMCDriver:
             blob, start = restored[0], int(restored[1])
             gs, ss = self._from_ckpt(blob)
             st = sampler.from_canonical(ss)  # native, device-resident
+            # a restart continues the harvest from the persisted bank
+            # instead of overwriting it with a shorter ensemble...
+            if (self.bank_builder is not None
+                    and len(self.bank_builder) == 0
+                    and os.path.exists(self.bank_path)):
+                self.bank_builder.extend_from(SampleBank.load(self.bank_path))
+            # ...and reconciles it with the REWIND: iterations past the
+            # restored step re-run and re-harvest, so samples beyond it
+            # are dropped first — whether they came from the persisted
+            # bank (bank saved after the restored checkpoint) or from
+            # this same driver object's interrupted run() — keeping
+            # every draw exactly once in the ensemble
+            if self.bank_builder is not None:
+                self.bank_builder.prune_after(start)
+                self._bank = None
         else:
             start = 0
             gs, st = sampler.init(jax.random.key(spec.seed))
+            # fresh start = iteration 0: an interrupted same-object run()
+            # that never checkpointed must not leak its harvests into
+            # this rerun (the iterations re-run and re-harvest)
+            if self.bank_builder is not None:
+                self.bank_builder.prune_after(0)
+                self._bank = None
 
         t0 = time.time()
         for it in range(start, n_iters):
@@ -294,6 +360,12 @@ class MCMCDriver:
             gs, st = sampler.step(gs, st)
             self._record_trace(gs)
             last = it == n_iters - 1
+            # harvest the post-sync posterior draw into the sample bank
+            # (host transfer of the K_max-sized params only — never Z)
+            if (self.bank_builder is not None
+                    and (it + 1) > int(spec.harvest_burn * n_iters)
+                    and (it + 1) % spec.harvest_every == 0):
+                self.bank_builder.add_state(gs, it=it + 1)
             need_eval = (it + 1) % spec.eval_every == 0 or last
             need_ckpt = (it + 1) % spec.ckpt_every == 0 or last
             # pulling gs.overflow blocks the host on the iteration's whole
@@ -313,10 +385,24 @@ class MCMCDriver:
                 if on_eval:
                     on_eval(rec)
             if need_ckpt:
+                # the bank rides the checkpoint cadence for durability
+                # (own self-describing file), and is written FIRST: a
+                # crash between the two writes then rewinds to an older
+                # checkpoint whose re-run re-harvests — prune_after on
+                # restore reconciles — whereas checkpoint-first would
+                # resume PAST unsaved harvests and lose them forever
+                if self.bank_builder is not None and len(self.bank_builder):
+                    self.save_bank()
                 save_pytree(spec.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
             if overflowed:
-                # capacity growth: checkpoint + restart with larger K_max
+                # capacity growth: checkpoint + restart with larger K_max.
+                # the bank is saved too (bank-first, as above) — the
+                # restart resumes AFTER this iteration, so harvests since
+                # the last cadence save would otherwise be dropped
                 if not need_ckpt:
+                    if (self.bank_builder is not None
+                            and len(self.bank_builder)):
+                        self.save_bank()
                     save_pytree(spec.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
                 raise RuntimeError(
                     f"K_max={spec.K_max} overflow at it={it}; restart with "

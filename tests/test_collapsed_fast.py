@@ -221,3 +221,29 @@ def test_monitor_repaired_chain_still_matches_oracle(data):
         st = collapsed_sweep(st, data, hyp, backend="fast", refresh_every=2)
     mism = int(jnp.sum(a.Z * a.active[None, :] != st.Z * st.active[None, :]))
     assert mism <= MISMATCH_BUDGET, mism
+
+
+def test_packed_scan_uniform_chunking_is_bitwise(data):
+    """The hoisted per-row uniform buffer is generated block-wise
+    (U_CHUNK_ROWS at a time) for large serial N — the key chain is
+    positional, so every chunk size must reproduce the identical
+    bitstream, hence identical decisions AND identical carry-out key."""
+    from repro.core.ibp.collapsed import _packed_scan
+
+    N = data.shape[0]
+    args = _scan_kwargs(data, seed=3)
+
+    def norm(leaf):
+        if hasattr(leaf, "dtype") and jax.dtypes.issubdtype(
+                leaf.dtype, jax.dtypes.prng_key):
+            return np.asarray(jax.random.key_data(leaf))
+        return np.asarray(leaf)
+
+    outs = {}
+    for chunk in (3, 16, 4096):
+        out = _packed_scan(*args, 0, N=float(N), birth="gibbs", B=8,
+                           refresh_every=64, u_chunk_rows=chunk)
+        outs[chunk] = [norm(x) for x in out]
+    for chunk in (16, 4096):
+        for a, b in zip(outs[3], outs[chunk]):
+            np.testing.assert_array_equal(a, b)
