@@ -1,0 +1,287 @@
+"""Fail-closed schema lint for the BENCH_*.json perf trajectory.
+
+The durable trajectory has two writers (`benchmarks/run.py` and
+`repro.launch.serve_ibp`) merging sections into the same date-keyed
+file, so a malformed section silently poisons the history consumers
+(the CI gates, the roofline table, anyone diffing trajectories). This
+lint closes that hole and gates `--smoke`:
+
+* every `BENCH_*.json` at the repo root is linted — zero files found
+  is itself a failure (the trajectory must exist);
+* every section present in a file must be REGISTERED in ``SECTIONS``
+  below with its required row keys — an unknown section fails (new
+  benchmarks must declare their schema here to land);
+* required keys must be present with the right type, numeric metrics
+  must be finite, and throughput/latency/speedup metrics must be
+  positive. Extra keys are allowed (forward-compatible).
+
+It also hosts the unified-core no-regression gate
+(``unpacked_core_regression``): the occupancy sweep's
+``k_live_buckets="off"`` timing now runs `_packed_scan` pinned to the
+top bucket (DESIGN.md §12), while the committed trajectory rows were
+measured with the pre-unification dedicated unpacked carry — so
+comparing current unpacked rows/s against the recorded row at the same
+(N, D, K_max, K_plus_target) proves deleting `_row_step_fast` cost no
+throughput. The margin is generous (shared-CI noise); a structural
+regression (the top bucket paying packing overhead) would show as ~2x.
+
+CLI: ``python -m benchmarks.bench_schema`` exits 1 on any lint error.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_NUM = (int, float)
+
+# top-level run metadata every BENCH file must carry
+TOP_LEVEL = {"date": str, "mode": str, "jax_backend": str,
+             "device_count": int}
+
+# section name -> shape spec. kind:
+#   "rows"  — the section IS a list of row dicts
+#   "table" — dict with scalar meta keys + a "results" row list
+#   "flat"  — one flat dict of required keys
+SECTIONS: dict[str, dict] = {
+    "kernels": dict(
+        kind="rows",
+        row={"name": str, "us": _NUM, "allclose": bool,
+             "arith_intensity": _NUM, "shape": dict},
+    ),
+    "collapsed_sweep": dict(
+        kind="table",
+        meta={"N": int, "D": int, "refresh_every": int},
+        row={"K_max": int, "K_plus": int,
+             "ref_rows_per_s": _NUM, "fast_rows_per_s": _NUM,
+             "ref_ms_per_sweep": _NUM, "fast_ms_per_sweep": _NUM,
+             "speedup": _NUM},
+    ),
+    "occupancy_sweep": dict(
+        kind="table",
+        meta={"N": int, "D": int, "refresh_every": int},
+        row={"K_max": int, "K_plus_target": int, "K_plus": int,
+             "unpacked_rows_per_s": _NUM, "packed_rows_per_s": _NUM,
+             "unpacked_ms_per_sweep": _NUM, "packed_ms_per_sweep": _NUM,
+             "packed_speedup": _NUM},
+    ),
+    "uncollapsed_sweep": dict(
+        kind="table",
+        meta={"D": int, "K": int},
+        row={"backend": str, "rows": int, "rows_per_s": _NUM,
+             "interpreted": bool},
+    ),
+    "hybrid_sync": dict(
+        kind="flat",
+        keys={"staged_s": _NUM, "fused_s": _NUM, "P": int, "N": int,
+              "K_max": int, "L": int},
+    ),
+    "predict_serving": dict(
+        kind="table",
+        meta={"config": dict},
+        row={"S": int, "B": int, "K": int, "D": int,
+             "batched_us": _NUM, "speedup": _NUM,
+             "rows_per_s_batched": _NUM},
+        extra_row_lists={"ops": {"op": str, "S": int, "K": int,
+                                 "rows_per_s": _NUM, "us_per_call": _NUM}},
+    ),
+    "serving_loop": dict(
+        kind="rows",
+        row={"op": str, "S": int, "K": int, "D": int, "batch": int,
+             "rows": int, "rows_per_s": _NUM,
+             "latency_p50_us": _NUM, "latency_p95_us": _NUM},
+    ),
+}
+
+# numeric metrics with these suffixes must be strictly positive
+_POSITIVE_SUFFIXES = ("rows_per_s", "_ms_per_sweep", "speedup", "_us",
+                      "_s", "us_per_call")
+
+
+def _check_type(val, typ) -> bool:
+    if typ is int:
+        return isinstance(val, int) and not isinstance(val, bool)
+    if typ is bool:
+        return isinstance(val, bool)
+    if typ == _NUM:
+        return isinstance(val, _NUM) and not isinstance(val, bool)
+    return isinstance(val, typ)
+
+
+def _check_keys(obj, spec: dict, where: str) -> list[str]:
+    errs = []
+    if not isinstance(obj, dict):
+        return [f"{where}: expected an object, got {type(obj).__name__}"]
+    for key, typ in spec.items():
+        if key not in obj:
+            errs.append(f"{where}: missing required key '{key}'")
+            continue
+        val = obj[key]
+        if not _check_type(val, typ):
+            errs.append(f"{where}.{key}: expected {typ}, got "
+                        f"{type(val).__name__} ({val!r})")
+            continue
+        if _check_type(val, _NUM) and typ == _NUM:
+            if not math.isfinite(val):
+                errs.append(f"{where}.{key}: non-finite metric ({val!r})")
+            elif val <= 0 and key.endswith(_POSITIVE_SUFFIXES):
+                errs.append(f"{where}.{key}: non-positive metric ({val!r})")
+    return errs
+
+
+def _check_rows(rows, row_spec: dict, where: str) -> list[str]:
+    if not isinstance(rows, list):
+        return [f"{where}: expected a row list, got {type(rows).__name__}"]
+    if not rows:
+        return [f"{where}: empty row list (a vacuous section cannot gate)"]
+    errs = []
+    for i, row in enumerate(rows):
+        errs += _check_keys(row, row_spec, f"{where}[{i}]")
+    return errs
+
+
+def lint_payload(payload: dict, where: str = "BENCH") -> list[str]:
+    """Lint one BENCH payload dict. Returns a list of error strings."""
+    errs = _check_keys(payload, TOP_LEVEL, where)
+    known = set(TOP_LEVEL) | set(SECTIONS)
+    for name in payload:
+        if name not in known:
+            errs.append(f"{where}.{name}: unregistered section — declare "
+                        f"its schema in benchmarks/bench_schema.py")
+    for name, spec in SECTIONS.items():
+        if name not in payload:
+            continue  # sections are optional (two writers, partial runs)
+        sec = payload[name]
+        loc = f"{where}.{name}"
+        if spec["kind"] == "rows":
+            errs += _check_rows(sec, spec["row"], loc)
+        elif spec["kind"] == "flat":
+            errs += _check_keys(sec, spec["keys"], loc)
+        else:  # table
+            errs += _check_keys(sec, spec["meta"], loc)
+            if isinstance(sec, dict):
+                errs += _check_rows(sec.get("results"), spec["row"],
+                                    f"{loc}.results")
+                for lname, lspec in spec.get("extra_row_lists",
+                                             {}).items():
+                    if lname in sec:
+                        errs += _check_rows(sec[lname], lspec,
+                                            f"{loc}.{lname}")
+    return errs
+
+
+def bench_files(root: str = REPO_ROOT) -> list[str]:
+    return sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+
+
+def lint_repo(root: str = REPO_ROOT) -> list[str]:
+    """Lint every BENCH_*.json at the repo root, fail-closed."""
+    files = bench_files(root)
+    if not files:
+        return [f"no BENCH_*.json found under {root} — the perf "
+                f"trajectory must exist (fail closed)"]
+    errs = []
+    for path in files:
+        name = os.path.basename(path)
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+        except (OSError, ValueError) as exc:
+            errs.append(f"{name}: unreadable ({exc})")
+            continue
+        errs += lint_payload(payload, where=name)
+    return errs
+
+
+def unpacked_core_regression(current_occ: dict, root: str = REPO_ROOT,
+                             min_ratio: float = 0.6,
+                             skip_date: str | None = None) -> list[str]:
+    """Unified-core no-regression gate (DESIGN.md §12).
+
+    ``current_occ`` is this run's ``occupancy_sweep`` section, whose
+    ``unpacked_rows_per_s`` was measured on `_packed_scan` pinned to
+    the top bucket; the committed trajectory's matching rows were
+    measured with the deleted dedicated unpacked carry. Absolute
+    rows/s do not transfer across runs on shared CI (a loaded box
+    slows everything 2-3x), so the gate compares the LOAD-INVARIANT
+    unpacked/packed throughput ratio — both sides of each row come
+    from the same run with interleaved repeats, so machine speed
+    cancels, and a regression specific to the top-bucket degenerate
+    mode (the deleted-path replacement) shows as that ratio dropping
+    below ``min_ratio`` of the recorded ratio. A slowdown uniform
+    across both modes is the companion fast>=2x-ref same-run gate's
+    job. Fails closed when there is no comparable recorded row at the
+    same (N, D, K_max, K_plus_target). ``skip_date`` excludes the
+    file this run is about to merge into (today's), which may hold
+    its own fresh numbers rather than a pre-unification record.
+    """
+    cur_rows = (current_occ or {}).get("results") or []
+    if not cur_rows:
+        return ["unified-core gate: current run produced no "
+                "occupancy_sweep rows (fail closed)"]
+    recorded = None
+    for path in reversed(bench_files(root)):
+        if skip_date and os.path.basename(path) == f"BENCH_{skip_date}.json":
+            continue
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+        except (OSError, ValueError):
+            continue
+        occ = payload.get("occupancy_sweep")
+        if occ and occ.get("results"):
+            recorded = (os.path.basename(path), occ)
+            break
+    if recorded is None:
+        return ["unified-core gate: no recorded occupancy_sweep in any "
+                "BENCH_*.json to compare against (fail closed)"]
+    rec_name, rec_occ = recorded
+    if (current_occ.get("N") != rec_occ.get("N")
+            or current_occ.get("D") != rec_occ.get("D")):
+        return [f"unified-core gate: current sweep sizes "
+                f"(N={current_occ.get('N')}, D={current_occ.get('D')}) do "
+                f"not match {rec_name} (N={rec_occ.get('N')}, "
+                f"D={rec_occ.get('D')}) — nothing comparable (fail closed)"]
+    errs = []
+    compared = 0
+    for cur in cur_rows:
+        match = [r for r in rec_occ["results"]
+                 if r.get("K_max") == cur.get("K_max")
+                 and r.get("K_plus_target") == cur.get("K_plus_target")]
+        if not match:
+            continue
+        compared += 1
+        rec = match[0]
+        rec_frac = rec["unpacked_rows_per_s"] / rec["packed_rows_per_s"]
+        cur_frac = cur["unpacked_rows_per_s"] / cur["packed_rows_per_s"]
+        if cur_frac < min_ratio * rec_frac:
+            errs.append(
+                f"unified-core gate: top-bucket unpacked sweep at "
+                f"K_max={cur['K_max']}/K_plus={cur['K_plus_target']} runs "
+                f"at {cur_frac:.2f}x its same-run packed throughput vs "
+                f"{rec_frac:.2f}x recorded in {rec_name} "
+                f"(< {min_ratio:.2f}x of the record — the unified core "
+                f"regressed vs the deleted unpacked carry)")
+    if compared == 0:
+        errs.append(
+            f"unified-core gate: no row of {rec_name} matches the "
+            f"current sweep's (N, D, K_max, K_plus_target) — the gate "
+            f"would be vacuous (fail closed)")
+    return errs
+
+
+def main(argv=None) -> int:
+    errs = lint_repo()
+    for e in errs:
+        print(f"BENCH lint: {e}", file=sys.stderr)
+    if not errs:
+        print(f"BENCH lint: {len(bench_files())} file(s) clean")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

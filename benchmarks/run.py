@@ -8,11 +8,15 @@ repo root (the durable perf trajectory: kernel timings as structured
 JSON objects, collapsed sweep ref-vs-fast rows/s per K, the occupancy
 sweep packed-vs-unpacked rows/s per K_plus, uncollapsed rows/s per
 backend, hybrid staged-vs-fused sync). ``--smoke`` runs the kernels +
-collapsed sections at tiny sizes and FAILS (exit 1) if either perf gate
-trips: the fast collapsed row step below ``SMOKE_MIN_SPEEDUP``x ref at
-K=64, or the packed (occupancy-adaptive) fast path below
+collapsed sections at tiny sizes and FAILS (exit 1) if any gate trips:
+the fast collapsed row step below ``SMOKE_MIN_SPEEDUP``x ref at K=64,
+the packed (occupancy-adaptive) fast path below
 ``SMOKE_MIN_PACKED_SPEEDUP``x the unpacked fast path at
-K_max=64/K_plus=8 — the CI perf gates. Individual benchmarks are
+K_max=64/K_plus=8, the fail-closed BENCH_*.json schema lint, or the
+unified-core no-regression gate (both in
+``benchmarks/bench_schema.py``) — the CI perf gates. A run also lints
+its OWN payload before writing it, so a malformed section can never
+enter the trajectory. Individual benchmarks are
 importable modules with their own CLIs for full-size runs; this runner
 uses CPU-sized defaults.
 """
@@ -138,9 +142,24 @@ def main(argv=None) -> int:
                         f"{occ8[0]['packed_speedup']:.2f}x unpacked at "
                         f"K_max=64/K_plus=8 (< {SMOKE_MIN_PACKED_SPEEDUP}x)"
                     )
+                # unified-core no-regression gate (DESIGN.md §12): the
+                # top-bucket unpacked timing must stay within noise of
+                # the trajectory recorded with the pre-unification
+                # dedicated unpacked carry
+                from benchmarks import bench_schema
+                failures += bench_schema.unpacked_core_regression(
+                    payload.get("occupancy_sweep", {}),
+                    skip_date=bench["date"])
         except Exception:
             failures.append("collapsed")
             traceback.print_exc()
+
+    if args.smoke:
+        # fail-closed schema lint over every committed BENCH_*.json —
+        # a malformed trajectory file fails CI before it can poison the
+        # perf-history consumers
+        from benchmarks import bench_schema
+        failures += bench_schema.lint_repo()
 
     if want("predict"):
         _section("predict: (S x B)-batched bank scoring vs naive loop")
@@ -229,7 +248,13 @@ def main(argv=None) -> int:
         print(line)
     if ("collapsed_sweep" in bench or "kernels" in bench
             or "predict_serving" in bench):
-        _write_bench_json(bench)
+        # never write a trajectory entry the lint would reject
+        from benchmarks import bench_schema
+        own_errs = bench_schema.lint_payload(bench, where="this-run")
+        if own_errs:
+            failures += own_errs
+        else:
+            _write_bench_json(bench)
     if failures:
         print(f"\nFAILED sections: {failures}", file=sys.stderr)
         return 1

@@ -103,6 +103,10 @@ class SamplerSpec:
     ckpt_every: int = 100
     ckpt_dir: str = "artifacts/ckpt/ibp"
     overflow_every: int = 8    # overflow-detection cadence (host sync)
+    k_tail_grow: int = 0       # adaptive K_tail: max automatic tail
+    #                            doublings at checkpoint boundaries when
+    #                            the tail-saturation counter fires
+    #                            (0 = fixed K_tail; ceiling is K_max)
     seed: int = 0
     # ---- posterior-predictive harvest (SampleBank, DESIGN.md §15)
     harvest_every: int = 0     # harvest a posterior sample every this many
@@ -150,6 +154,15 @@ class SamplerSpec:
             bad(f"L={self.L} must be >= 1")
         if self.K_max < 1 or self.K_tail < 1:
             bad(f"K_max={self.K_max}, K_tail={self.K_tail} must be >= 1")
+        if self.K_tail > self.K_max:
+            bad(f"K_tail={self.K_tail} exceeds K_max={self.K_max}: tail "
+                f"promotion scatters into free instantiated slots, so a "
+                f"tail wider than the capacity can try to place births "
+                f"with no slot to hold them (at full occupancy every "
+                f"promotion would silently drop)")
+        if self.k_tail_grow < 0:
+            bad(f"k_tail_grow={self.k_tail_grow} must be >= 0 "
+                f"(0 disables adaptive K_tail growth)")
         if not 0 <= self.K_init <= self.K_max:
             bad(f"K_init={self.K_init} must be in [0, K_max={self.K_max}]")
         if self.stale_sync < 0:

@@ -23,34 +23,42 @@ Two row-step backends (DESIGN.md §12), selected by ``backend=``:
   remove-row = one downdate, singleton drop / new dish = diagonal
   identity swaps (the affected row/col of W is exactly ratio·e_k), add-row
   = one update; H moves by the matching rank-one corrections. O(K^2 + K D)
-  algorithmic work per row — though two rewrites deliberately trade big-O
-  for BLAS constants: the up/downdate prefix sums go through a K^3 tril
-  GEMM and the packed flip recomputes G = H Hᵀ (K^2 D) per row, both
-  faster in wall-clock than their asymptotically-smaller forms at our K
-  (DESIGN.md §12; carrying G rank-one would restore the strict bound).
-  An exact refactorization every ``refresh_every`` rows plus a drift
-  monitor (probe residual ‖M W p − p‖_∞ against the exactly maintained
-  integer sufficient statistics, and the downdate's loss-of-positivity
-  canary) force an early refresh when the carry degrades.
+  algorithmic work per row. An exact refactorization every
+  ``refresh_every`` rows plus a drift monitor (probe residual
+  ‖M W p − p‖_∞ against the exactly maintained integer sufficient
+  statistics, and the downdate's loss-of-positivity canary) force an
+  early refresh when the carry degrades.
 * ``"pallas"`` — the fast path with the K-sequential bit-flip recurrence
   executed by the ``kernels/collapsed_row`` Pallas kernel (VMEM-resident
   carry; compiled on TPU, interpret elsewhere).
 
-Occupancy-adaptive packing (DESIGN.md §14), ``k_live_buckets="on"``: the
-fast/pallas carry additionally runs PACKED to the live K⁺ block — a
-power-of-two bucket B ∈ {8, 16, ..., K_max} holding every live column
-plus the lowest-index free slots, canonically ordered — so every dense
-op costs O(B²+BD) instead of O(K_max²+K_max·D), and G = HHᵀ joins the
-carry (moved by the rank-two corrections matching each H move) to
-restore the strict O(K²+KD) row bound the unpacked flip traded away.
-``collapsed_sweep`` picks the bucket host-side per sweep (and re-packs
-mid-sweep when a feature birth overflows the block — the overflowing
-row is re-run at the bigger bucket, so decisions stay on the oracle's
-trajectory); the in-jit entry ``collapsed_row_scan(pack=True)`` (the
-hybrid tail) runs the packed carry at the full padded width, where the
-G carry is the win. Packing is a pure permutation + refresh: decisions
-are ref-equivalent within the same boundary budget as the unpacked
-fast path.
+There is ONE implementation of the carried row step: ``_packed_scan``,
+which runs the carry PACKED to a block of B columns (the unified core,
+DESIGN.md §12). Under ``k_live_buckets="on"`` (default) B is the live
+K⁺ bucket — a power-of-two B ∈ {8, 16, ..., K_max} holding every live
+column plus the lowest-index free slots, canonically ordered — so every
+dense op costs O(B²+BD) instead of O(K_max²+K_max·D), and G = HHᵀ joins
+the carry (moved by the rank-two corrections matching each H move) to
+keep the strict O(K²+KD) row bound. ``collapsed_sweep`` picks the
+bucket host-side per sweep (and re-packs mid-sweep when a feature birth
+overflows the block — the overflowing row is re-run at the bigger
+bucket, so decisions stay on the oracle's trajectory).
+``k_live_buckets="off"`` is the TOP-BUCKET degenerate point of the same
+ladder: the identical packed core at B = K_max with the G carry
+disabled (``carry_g=False``), which is bitwise-identical to the
+pre-unification unpacked carry (the packed flip recomputes G = HHᵀ per
+row, exactly as the legacy ``_row_step_fast`` did). The in-jit entry
+``collapsed_row_scan`` (the hybrid tail) runs the same core at the full
+padded width — ``pack=True`` carries G, ``pack=False`` keeps the
+legacy float path. Packing is a pure permutation + refresh: decisions
+are ref-equivalent within a tiny boundary budget in every mode.
+
+The MH new-dish move additionally reports a TAIL-SATURATION counter
+(``n_sat``): rows whose accepted birth proposal was rejected only for
+lack of free columns. The hybrid sampler aggregates it into
+``HybridGlobal.tail_sat``, where it drives adaptive ``K_tail`` growth
+(runtime/driver.py) — the finite-truncation bias of the tail becomes a
+monitored, convergent quantity instead of a silent cap.
 """
 from __future__ import annotations
 
@@ -88,7 +96,7 @@ def _log_poisson(j: Array, lam: Array) -> Array:
 
 def _sample_dishes(kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D,
                    birth, n_free_extra=0.0):
-    """Shared new-dish move: returns (z', active', newbits, j_new).
+    """Shared new-dish move: returns (z', active', newbits, j_new, sat).
 
     ``birth`` selects the move:
       * "gibbs" — exact truncated Gibbs over j ∈ 0..J_MAX (G&G; collapsed
@@ -97,6 +105,13 @@ def _sample_dishes(kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D,
         propose j ~ Poisson(alpha/N) and accept with the marginal-likelihood
         ratio (prior ∝ proposal, so they cancel). Out-of-capacity proposals
         are rejected.
+
+    ``sat`` is the tail-saturation flag: True iff an MH proposal that the
+    likelihood ACCEPTED was rejected purely for lack of free columns
+    (j ≤ J_MAX but j > n_free) — i.e. the row wanted more in-flight
+    births than the truncation admits. Always False for "gibbs" (the
+    collapsed baseline's capacity is K_max; its truncation is tracked by
+    the driver's overflow machinery, not here).
 
     ``n_free_extra`` is the packed row step's out-of-block free-slot
     count: the draw must see the CANONICAL free capacity (what the
@@ -119,6 +134,7 @@ def _sample_dishes(kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D,
         logits = _log_poisson(js, lam) + ll_j
         logits = jnp.where(js <= n_free, logits, -jnp.inf)
         j_new = jax.random.categorical(kdish, logits).astype(x_n.dtype)
+        sat = jnp.zeros((), jnp.bool_)
     else:
         # paper's MH: propose j ~ Poisson(lam), accept w.p. lik(j)/lik(0)
         kprop, kacc = jax.random.split(kdish)
@@ -128,12 +144,15 @@ def _sample_dishes(kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D,
         dll = ll_j[j_idx] - ll_j[0]
         acc = jnp.log(jax.random.uniform(kacc, (), dtype=x_n.dtype)) < dll
         j_new = jnp.where(ok & acc, j_prop, 0.0)
+        # capacity-bound rejection of an otherwise-accepted proposal: the
+        # truncation (not the likelihood) vetoed these births
+        sat = acc & (j_prop <= float(J_MAX)) & (j_prop > n_free)
     # place new dishes in the first j_new free slots
     free_rank = jnp.cumsum(free) * free  # 1-indexed rank among free slots
     newbits = ((free_rank >= 1.0) & (free_rank <= j_new)).astype(z.dtype)
     z = z + newbits
     active_new = jnp.maximum(active_m, newbits)
-    return z, active_new, newbits, j_new
+    return z, active_new, newbits, j_new, sat
 
 
 def _row_step(carry, n, *, X, N, D, birth="gibbs"):
@@ -143,8 +162,12 @@ def _row_step(carry, n, *, X, N, D, birth="gibbs"):
     tail runs on processor p' with local rows but global-N priors
     ((m_k - Z_nk)/N and Poisson(alpha/N)), exactly as in the paper's
     pseudocode.
+
+    The trailing ``n_sat`` carry element only accumulates the new-dish
+    saturation flag — the sampling algebra and PRNG stream above it are
+    the unchanged oracle.
     """
-    Z, active, ZtZ, ZtX, m, alpha, sx, sa, key = carry
+    Z, active, ZtZ, ZtX, m, alpha, sx, sa, key, n_sat = carry
     x_n = X[n]
     z = Z[n]
     # ---- remove row n from the sufficient statistics
@@ -178,7 +201,7 @@ def _row_step(carry, n, *, X, N, D, birth="gibbs"):
     )
 
     # ---- new dishes, j = 0..J_MAX
-    z, active_new, _, _ = _sample_dishes(
+    z, active_new, _, _, sat = _sample_dishes(
         kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D, birth
     )
 
@@ -187,27 +210,8 @@ def _row_step(carry, n, *, X, N, D, birth="gibbs"):
     ZtZ_n = ZtZ_m * ibm.mask_outer(active_m) + jnp.outer(z, z)
     ZtX_n = ZtX_m * active_m[:, None] + jnp.outer(z, x_n)
     Z = Z.at[n].set(z)
-    return (Z, active_new, ZtZ_n, ZtX_n, m_new, alpha, sx, sa, key), None
-
-
-class _FastCarry(NamedTuple):
-    """Row-scan carry of the fast backend: sufficient statistics (exact,
-    integer-valued where counts) + the carried factorization of the FULL
-    row set (Lt = (chol W)^T, M = W^{-1} masked, H = M ZtX masked).
-    L is carried transposed so the rank-one moves' cumulative sums run
-    along contiguous rows (see math._chol_rank1_t)."""
-
-    Z: Array
-    active: Array
-    ZtZ: Array
-    ZtX: Array
-    m: Array
-    Lt: Array
-    M: Array
-    H: Array
-    since: Array      # rows since last exact refactorization
-    n_refresh: Array  # monitor/cadence-triggered refactorizations this scan
-    key: Array
+    return (Z, active_new, ZtZ_n, ZtX_n, m_new, alpha, sx, sa, key,
+            n_sat + sat.astype(n_sat.dtype)), None
 
 
 def _exact_factor(ZtZ, ZtX, active, ratio):
@@ -219,219 +223,17 @@ def _exact_factor(ZtZ, ZtX, active, ratio):
     return L.T, M, H
 
 
-def _row_step_fast(carry: _FastCarry, n, *, X, N, D, birth, alpha, sx, sa,
-                   refresh_every, drift_tol, flip_flavor):
-    """Resample row n, collapsed, in O(K^2 + K D) via carried factorization.
-
-    Transition algebra (DESIGN.md §12): with z = Z[n] and W carrying ALL
-    rows, remove-row is the rank-one downdate W − z zᵀ, add-row the
-    update W + z zᵀ; the matching Sherman–Morrison moves for M = W⁻¹ and
-    H = M ZᵀX are
-        remove:  M += (Mz)(Mz)ᵀ/δ,  H += (Mz)(zᵀH − x_nᵀ)/δ,  δ = 1 − zᵀMz
-        add:     M −= (Mz)(Mz)ᵀ/δ,  H += (Mz)(x_nᵀ − zᵀH)/δ,  δ = 1 + zᵀMz
-    Singleton drops and new-dish activations touch W only on the identity-
-    vs-ratio diagonal of an exactly-decoupled coordinate (the dropped /
-    appended column has no support in Z_-n, so its W row/col is exactly
-    ratio·e_k), so L, M, H move by row/col masking + a diagonal write —
-    no factorization work.
-
-    Fixed-point shortcut: when the row leaves both its bits and the
-    active set unchanged (the common case after burn-in), remove-row
-    followed by add-row is the IDENTITY on (W, ZtX) — so the pre-removal
-    (Lt, M, H) are carried through untouched instead of round-tripped
-    through a downdate/update pair. This skips the L moves and the
-    add-back Sherman–Morrison entirely AND accrues zero float drift on
-    such rows; only rows that actually change pay the O(K^2) moves. The
-    downdate canary still runs every row (it needs only p and an O(K)
-    cumsum, not the L apply), as does the probe drift monitor.
-    """
-    Z, active, ZtZ, ZtX, m, Lt, M, H, since, n_refresh, key = carry
-    x_n = X[n]
-    z_old = Z[n]
-    ratio = (sx / sa) ** 2
-    # ---- remove row n from the sufficient statistics. The row-deleted
-    # (ZtZ_m, ZtX_m) matrices are NEVER materialized on the hot path: the
-    # probe needs one corrected matvec, the refresh branch (rare) builds
-    # them locally, and the add-back fuses remove+add into one delta.
-    m_minus = m - z_old
-    # ---- remove row n from the posterior map (Sherman–Morrison)
-    zu = z_old * active
-    w = M @ zu
-    # downdate canary WITHOUT applying the L move: p = L^{-1} z comes from
-    # the carried inverse (L^T (M z), a matvec — no triangular solve) and
-    # positive definiteness of W − z z^T is equivalent to all partial
-    # d_j = 1 − cumsum(p^2)_j staying positive
-    p_down = Lt @ w
-    down_ok = jnp.all(1.0 - jnp.cumsum(p_down * p_down) > 1e-12)
-    gamma = jnp.dot(zu, w)
-    delta_s = jnp.maximum(1.0 - gamma, 1e-6)  # guard; probe catches real loss
-    zH = zu @ H
-    # scale the K-vector once, not the K^2/KD outers; the sqrt split keeps
-    # M1 EXACTLY symmetric (the packed flip reads rows as columns)
-    wr = w / jnp.sqrt(delta_s)
-    wd = w / delta_s
-    M1 = M + jnp.outer(wr, wr)
-    H1 = H + jnp.outer(wd, zH - x_n)
-    # ---- singleton drop: decoupled coordinates swap ratio -> identity.
-    # M1/H1 already carry exact zeros on inactive rows/cols, so the mask
-    # is a no-op unless a column actually dropped — gate it.
-    drop = active * (m_minus <= 0.5)
-    z = z_old * (1.0 - drop)
-    active_m = active * (1.0 - drop)
-    has_drop = jnp.any(drop > 0.5)
-
-    def do_drop(ops):
-        M1, H1 = ops
-        keep2 = ibm.mask_outer(active_m)
-        return M1 * keep2, H1 * active_m[:, None]
-
-    M1, H1 = jax.lax.cond(has_drop, do_drop, lambda ops: ops, (M1, H1))
-    # ---- drift monitor + periodic exact refactorization
-    # probe p = active_m against the EXACT integer stats: W_m p collapses to
-    # one matvec (masking + ratio on the diagonal fold into active_m; the
-    # row removal is the O(K) correction -z_old (z_old . p)).
-    # Probed every PROBE_EVERY rows (deterministic): detection is delayed by
-    # at most PROBE_EVERY - 1 rows, the refresh_every bound is unaffected,
-    # and the downdate canary still runs every row.
-    def do_probe(_):
-        tm = ZtZ @ active_m - z_old * jnp.dot(z_old, active_m)
-        probe_t = active_m * tm + ratio * active_m
-        return jnp.max(jnp.abs(M1 @ probe_t - active_m))
-
-    drift = jax.lax.cond(
-        since % PROBE_EVERY == 0, do_probe, lambda _: jnp.zeros((), X.dtype),
-        None,
-    )
-    # NaN-safe: ~(drift <= tol) is True for NaN, (drift > tol) is not
-    need = (since >= refresh_every - 1) | (~down_ok) | (~(drift <= drift_tol))
-
-    def do_refresh(_):
-        ZtZ_m = ZtZ - jnp.outer(z_old, z_old)
-        ZtX_m = ZtX - jnp.outer(z_old, x_n)
-        L2, M2 = ibm.chol_inv(ibm.padded_W(ZtZ_m, active_m, ratio))
-        M2 = M2 * ibm.mask_outer(active_m)
-        return L2.T, M2, M2 @ (ZtX_m * active_m[:, None])
-
-    # Lt_rm is the ROW-REMOVED factor (only materialized on refresh; on the
-    # cheap path the L downdate is deferred into the `changed` branch below)
-    Lt_rm, M1, H1 = jax.lax.cond(
-        need, do_refresh, lambda _: (Lt, M1, H1), None
-    )
-    since = jnp.where(need, 0, since + 1)
-    n_refresh = n_refresh + need.astype(n_refresh.dtype)
-
-    # ---- bit flips (identical recurrence + PRNG stream as the oracle)
-    inv2s2 = 0.5 / (sx**2)
-    K = Z.shape[1]
-    key, kbits, kdish, kslot = jax.random.split(key, 4)
-    uu = jnp.clip(jax.random.uniform(kbits, (K,), dtype=X.dtype), 1e-7, 1.0 - 1e-7)
-    u = jnp.log(uu) - jnp.log1p(-uu)
-
-    # (v, q, mean) of the row-removed state. On the clean path (no drop, no
-    # refresh) they fall out of the Sherman–Morrison vectors already in
-    # hand: v = M1 z = w/δ, q = γ/δ, mean = z H1 = zH + (γ/δ)(zH − x) —
-    # zero extra matvecs. Any drop/refresh invalidates those identities.
-    def vqm_closed(_):
-        gd = gamma / delta_s
-        return wd, gd, zH + gd * (zH - x_n)
-
-    def vqm_matvec(_):
-        v = M1 @ z
-        return v, jnp.dot(z, v), z @ H1
-
-    v, q, mean = jax.lax.cond(
-        has_drop | need, vqm_matvec, vqm_closed, None
-    )
-    z, v, q, mean = collapsed_row_flip(
-        M1, H1, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2,
-        flavor=flip_flavor,
-    )
-
-    # ---- new dishes
-    z, active_new, newbits, _ = _sample_dishes(
-        kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D, birth
-    )
-
-    # ---- add row n back. Stats move only when something moved: unchanged
-    # rows carry (ZtZ, ZtX) through untouched (remove+add is the identity);
-    # changed rows fuse remove+add into one delta; a drop (rare) takes the
-    # masked two-step so the dropped column's row/col is zeroed exactly.
-    m_new = m_minus * active_m + z
-    changed = (
-        need | jnp.any(z != z_old) | jnp.any(active_new != active)
-    )
-
-    def stats_moved(_):
-        def masked(_):
-            return ((ZtZ - jnp.outer(z_old, z_old))
-                    * ibm.mask_outer(active_m) + jnp.outer(z, z),
-                    (ZtX - jnp.outer(z_old, x_n)) * active_m[:, None]
-                    + jnp.outer(z, x_n))
-
-        def fused(_):
-            return (ZtZ + jnp.outer(z, z) - jnp.outer(z_old, z_old),
-                    ZtX + jnp.outer(z - z_old, x_n))
-
-        return jax.lax.cond(has_drop, masked, fused, None)
-
-    ZtZ_n, ZtX_n = jax.lax.cond(
-        changed | has_drop, stats_moved, lambda _: (ZtZ, ZtX), None
-    )
-
-    def apply_moves(_):
-        # the factor really moved: finish remove -> drop -> activate -> add
-        Lt1 = jax.lax.cond(
-            need,
-            lambda __: Lt_rm,  # refresh already produced the removed factor
-            lambda __: ibm.chol_rank1_downdate_t(Lt, p_down)[0],
-            None,
-        )
-
-        # drop/activation diagonal swaps are exact no-ops unless a column
-        # actually dropped or was born this row — gate the K^2 mask work
-        def diag_swaps(ops):
-            Lt1, M1, H1 = ops
-            keep2 = ibm.mask_outer(active_m)
-            Lt1 = Lt1 * keep2 + jnp.diag(1.0 - active_m)
-            # activation: decoupled coordinates swap identity -> ratio
-            Lt1 = Lt1 + jnp.diag(newbits * (jnp.sqrt(ratio) - 1.0))
-            M1b = M1 + jnp.diag(newbits / ratio)
-            H1b = H1 * (1.0 - newbits)[:, None]
-            return Lt1, M1b, H1b
-
-        Lt1, M1b, H1b = jax.lax.cond(
-            has_drop | jnp.any(newbits > 0.5), diag_swaps, lambda ops: ops,
-            (Lt1, M1, H1),
-        )
-        w2 = M1b @ z
-        Lt2 = ibm.chol_rank1_update_t(Lt1, Lt1 @ w2)
-        d2 = 1.0 + jnp.dot(z, w2)
-        w2r = w2 / jnp.sqrt(d2)
-        M2 = M1b - jnp.outer(w2r, w2r)
-        H2 = H1b + jnp.outer(w2 / d2, x_n - z @ H1b)
-        return Lt2, M2, H2
-
-    Lt_n, M_n, H_n = jax.lax.cond(
-        changed, apply_moves, lambda _: (Lt, M, H), None
-    )
-    Z = Z.at[n].set(z)
-    return _FastCarry(
-        Z=Z, active=active_new, ZtZ=ZtZ_n, ZtX=ZtX_n, m=m_new,
-        Lt=Lt_n, M=M_n, H=H_n, since=since, n_refresh=n_refresh, key=key,
-    ), None
-
-
 class _PackedCarry(NamedTuple):
-    """Row-scan carry of the OCCUPANCY-ADAPTIVE (packed) fast backend
-    (DESIGN.md §14). Everything feature-indexed lives on the K_live block
-    (size B, canonical columns ``cols`` ascending); only Z stays in the
-    canonical layout (rows are gathered/scattered through ``cols`` per
-    row). vs ``_FastCarry``: G = HHᵀ joins the carry — moved by the
+    """Row-scan carry of the unified packed fast backend (DESIGN.md §12).
+    Everything feature-indexed lives on the K_live block (size B,
+    canonical columns ``cols`` ascending); only Z stays in the canonical
+    layout (rows are gathered/scattered through ``cols`` per row).
+    When ``carry_g`` is on, G = HHᵀ joins the carry — moved by the
     rank-two corrections matching each Sherman–Morrison H move instead
-    of the per-row O(K²D) recompute in the packed flip — and ``n``/
-    ``ovf`` drive the early-exit while_loop (a birth that cannot be
-    placed inside the block stops the scan BEFORE committing its row, so
-    the host can repack and resume bitwise)."""
+    of the per-row O(K²D) recompute in the packed flip; ``n``/``ovf``
+    drive the early-exit while_loop (a birth that cannot be placed
+    inside the block stops the scan BEFORE committing its row, so the
+    host can repack and resume bitwise)."""
 
     n: Array          # () int32 — next row to process
     Z: Array          # (n_rows, K_canonical)
@@ -442,9 +244,10 @@ class _PackedCarry(NamedTuple):
     Lt: Array         # (B, B)
     M: Array          # (B, B)
     H: Array          # (B, D)
-    G: Array          # (B, B) = H Hᵀ (carried)
+    G: Array          # (B, B) = H Hᵀ (carried; () placeholder when off)
     since: Array
     n_refresh: Array
+    n_sat: Array      # () int32 — capacity-vetoed accepted births so far
     ovf: Array        # () bool — birth did not fit the packed block
     ubuf: Array       # (u_chunk, K_canonical) — current uniform block
     ubase: Array      # () int32 — first row-offset covered by ``ubuf``
@@ -452,32 +255,41 @@ class _PackedCarry(NamedTuple):
 
 @partial(jax.jit, static_argnames=("N", "birth", "B", "refresh_every",
                                    "drift_tol", "flip_flavor",
-                                   "u_chunk_rows"))
+                                   "u_chunk_rows", "carry_g"))
 def _packed_scan(
     Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa, start_row, *,
     N: float, birth: str, B: int, refresh_every: int,
     drift_tol: float = DEFAULT_DRIFT_TOL, flip_flavor: str = "packed",
-    u_chunk_rows: int = U_CHUNK_ROWS,
+    u_chunk_rows: int = U_CHUNK_ROWS, carry_g: bool = True,
 ):
     """Packed row scan from ``start_row`` to the end of X — or to the
-    first birth that does not fit the K_live block.
+    first birth that does not fit the K_live block. THE single
+    implementation of the carried collapsed row step (DESIGN.md §12).
 
     Inputs and outputs are CANONICAL (K_max-padded); the block gather at
     entry, the exact refactorization of the packed factor (+ G), and the
     scatter back at exit happen inside this one jitted function, so a
     bucket change costs exactly one repack + refresh. Returns
-    (Z, active, ZtZ, ZtX, m, n_refresh, key, ovf_row): ``ovf_row`` is -1
-    when the scan completed, else the first UNPROCESSED row — all rows
-    before it are committed, and the caller resumes from it after
+    (Z, active, ZtZ, ZtX, m, n_refresh, n_sat, key, ovf_row): ``ovf_row``
+    is -1 when the scan completed, else the first UNPROCESSED row — all
+    rows before it are committed, and the caller resumes from it after
     repacking (``ibm.pick_bucket`` guarantees the pending birth then
-    fits, so every resume makes progress).
+    fits, so every resume makes progress). ``n_sat`` counts committed
+    rows whose accepted MH birth was vetoed by capacity (always 0 for
+    ``birth="gibbs"``).
+
+    ``carry_g=False`` is the TOP-BUCKET degenerate mode (B = K_max, the
+    ``k_live_buckets="off"`` sweep): the G carry is skipped entirely and
+    the packed flip recomputes G = HHᵀ per row, which reproduces the
+    pre-unification unpacked carry BITWISE — the G carry is the only
+    float-path difference between the two.
 
     Decision equivalence: the block holds every live column plus the
     lowest-index free slots in canonical order, the per-row uniform draw
     keeps the oracle's (K_canonical,) shape (gathered through ``cols``),
     and the new-dish draw sees the canonical free capacity — so the
     only packed-vs-oracle differences are float-rounding boundary
-    events, exactly as for the unpacked fast path.
+    events, in every mode.
     """
     n_rows, D = X.shape
     K_can = Z.shape[1]
@@ -491,7 +303,7 @@ def _packed_scan(
     Lt0, M0, H0 = _exact_factor(ZtZ_p, ZtX_p, active_p, ratio)
     # the mean-form pallas flip never consumes G — skip the whole G carry
     # (moves, refresh rebuild, probe term) at trace time for that flavor
-    carry_g = flip_flavor != "pallas"
+    carry_g = carry_g and flip_flavor != "pallas"
     G0 = H0 @ H0.T if carry_g else jnp.zeros((), X.dtype)
     inv2s2 = 0.5 / (sx**2)
 
@@ -661,7 +473,7 @@ def _packed_scan(
         # ---- new dishes: canonical free capacity; placement must stay
         # inside the block AND below every out-of-block index to match
         # the oracle's first-free-slot rule — otherwise flag + bail
-        z2, active_new, newbits, j_new = _sample_dishes(
+        z2, active_new, newbits, j_new, sat = _sample_dishes(
             kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D, birth,
             n_free_extra=n_out_free,
         )
@@ -744,6 +556,7 @@ def _packed_scan(
             Lt=sel(Lt, Lt_n), M=sel(M, M_n), H=sel(H, H_n), G=sel(G, G_n),
             since=sel(c.since, since),
             n_refresh=sel(c.n_refresh, n_refresh),
+            n_sat=sel(c.n_sat, c.n_sat + sat.astype(c.n_sat.dtype)),
             ovf=birth_ovf,
             # no sel(): the refill is positional in j, and an overflow
             # exits the loop — the host resumes with a fresh scan call
@@ -754,6 +567,7 @@ def _packed_scan(
         n=jnp.asarray(start_row, jnp.int32), Z=Z, active=active_p,
         ZtZ=ZtZ_p, ZtX=ZtX_p, m=m_p, Lt=Lt0, M=M0, H=H0, G=G0,
         since=jnp.zeros((), jnp.int32), n_refresh=jnp.zeros((), jnp.int32),
+        n_sat=jnp.zeros((), jnp.int32),
         ovf=jnp.zeros((), jnp.bool_),
         ubuf=(gen_u(jnp.zeros((), jnp.int32)) if chunked
               else jnp.zeros((0, K_can), X.dtype)),
@@ -772,8 +586,8 @@ def _packed_scan(
     m_c = jnp.zeros((K_can,), dt).at[cols].set(out.m)
     ovf_row = jnp.where(out.ovf, out.n, -1)
     key_out = jax.random.wrap_key_data(chain_data[out.n - sr])
-    return (out.Z, active_c, ZtZ_c, ZtX_c, m_c, out.n_refresh, key_out,
-            ovf_row)
+    return (out.Z, active_c, ZtZ_c, ZtX_c, m_c, out.n_refresh, out.n_sat,
+            key_out, ovf_row)
 
 
 def collapsed_row_scan(
@@ -794,61 +608,56 @@ def collapsed_row_scan(
     refresh_every: int = DEFAULT_REFRESH,
     drift_tol: float = DEFAULT_DRIFT_TOL,
     pack: bool = False,
-) -> tuple[Array, Array, Array, Array, Array, Array]:
+    u_chunk_rows: int | None = None,
+) -> tuple[Array, Array, Array, Array, Array, Array, Array]:
     """Scan the collapsed row step over every row of ``X``.
 
     The shared entry point of the serial baseline (``collapsed_sweep``)
     and the hybrid tail (``hybrid._tail_sub_iteration``). Returns
-    (Z, active, ZtZ, ZtX, m, n_refresh); ``n_refresh`` counts exact
-    refactorizations (cadence + monitor) and is 0 on the ref backend.
+    (Z, active, ZtZ, ZtX, m, n_refresh, n_sat); ``n_refresh`` counts
+    exact refactorizations (cadence + monitor, 0 on the ref backend)
+    and ``n_sat`` the capacity-vetoed accepted MH births (the tail-
+    saturation signal; 0 for ``birth="gibbs"``).
 
-    ``pack=True`` routes the fast/pallas carry through the packed row
-    step at the FULL padded width (a static in-jit bucket: B = K). The
-    bucketed B < K_max dispatch needs the host (``collapsed_sweep``);
-    what this in-jit entry buys — the hybrid tail in particular — is the
-    carried G = HHᵀ, which removes the per-row O(K²D) GEMM from the
-    packed flip (DESIGN.md §14). Ignored for ``backend="ref"``.
+    The fast/pallas backends run the ONE packed core at the full padded
+    width (a static in-jit bucket: B = K; the bucketed B < K_max
+    dispatch needs the host — ``collapsed_sweep``). ``pack`` selects the
+    float path: ``True`` carries G = HHᵀ, removing the per-row O(K²D)
+    GEMM from the packed flip (the hybrid tail's win); ``False`` keeps
+    the legacy unpacked float path (G recomputed per row) — bitwise the
+    pre-unification ``k_live_buckets="off"`` carry. Ignored for
+    ``backend="ref"``.
+
+    ``u_chunk_rows=None`` keeps the historical defaults: the full
+    (n_rows, K) uniform hoist for ``pack=True`` and the chunked
+    U_CHUNK_ROWS buffer otherwise. The chunked refill is safe only for
+    host-dispatched serial callers — in-jit / vmapped callers (the
+    hybrid tail) MUST pass ``u_chunk_rows >= n_rows``: under vmap the
+    chunk-refill lax.cond lowers to select and regenerates a whole
+    block per row.
     """
     if backend not in COLLAPSED_BACKENDS:
         raise ValueError(f"backend={backend!r} not in {COLLAPSED_BACKENDS}")
     n_rows, D = X.shape
-    rows = jnp.arange(n_rows)
     if backend == "ref":
         body = partial(_row_step, X=X, N=N, D=D, birth=birth)
-        carry = (Z, active, ZtZ, ZtX, m, alpha, sx, sa, key)
-        carry, _ = jax.lax.scan(body, carry, rows)
+        carry = (Z, active, ZtZ, ZtX, m, alpha, sx, sa, key,
+                 jnp.zeros((), jnp.int32))
+        carry, _ = jax.lax.scan(body, carry, jnp.arange(n_rows))
         Z, active, ZtZ, ZtX, m = carry[:5]
-        return Z, active, ZtZ, ZtX, m, jnp.zeros((), jnp.int32)
-    if pack:
-        # full-width block: overflow is impossible (no out-of-block slots).
-        # u_chunk_rows=n_rows disables the in-loop uniform refill: this
-        # entry runs inside jit and may be chain-vmapped (the hybrid
-        # tail), where a lax.cond refill would lower to select and
-        # regenerate a whole block per row — and its K_canonical is the
-        # small K_tail, so the full (n_rows, K) hoist is cheap anyway
-        Z, active, ZtZ, ZtX, m, n_refresh, _, _ = _packed_scan(
-            Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa, 0,
-            N=N, birth=birth, B=Z.shape[1], refresh_every=refresh_every,
-            drift_tol=drift_tol,
-            flip_flavor="pallas" if backend == "pallas" else "packed",
-            u_chunk_rows=n_rows,
-        )
-        return Z, active, ZtZ, ZtX, m, n_refresh
-    ratio = (sx / sa) ** 2
-    Lt, M, H = _exact_factor(ZtZ, ZtX, active, ratio)
-    body = partial(
-        _row_step_fast, X=X, N=N, D=D, birth=birth,
-        alpha=alpha, sx=sx, sa=sa,
-        refresh_every=refresh_every, drift_tol=drift_tol,
+        return Z, active, ZtZ, ZtX, m, jnp.zeros((), jnp.int32), carry[9]
+    # full-width block: overflow is impossible (no out-of-block slots)
+    Z, active, ZtZ, ZtX, m, n_refresh, n_sat, _, _ = _packed_scan(
+        Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa, 0,
+        N=N, birth=birth, B=Z.shape[1], refresh_every=refresh_every,
+        drift_tol=drift_tol,
         flip_flavor="pallas" if backend == "pallas" else "packed",
+        u_chunk_rows=(u_chunk_rows if u_chunk_rows is not None
+                      else n_rows if pack
+                      else min(U_CHUNK_ROWS, n_rows)),
+        carry_g=pack,
     )
-    carry = _FastCarry(
-        Z=Z, active=active, ZtZ=ZtZ, ZtX=ZtX, m=m, Lt=Lt, M=M, H=H,
-        since=jnp.zeros((), jnp.int32), n_refresh=jnp.zeros((), jnp.int32),
-        key=key,
-    )
-    carry, _ = jax.lax.scan(body, carry, rows)
-    return carry.Z, carry.active, carry.ZtZ, carry.ZtX, carry.m, carry.n_refresh
+    return Z, active, ZtZ, ZtX, m, n_refresh, n_sat
 
 
 def _finish_sweep(state, X, hyp, Z, active, ZtZ, ZtX, m,
@@ -915,13 +724,14 @@ def _collapsed_sweep_jit(
     backend: str = "ref",
     refresh_every: int = DEFAULT_REFRESH,
 ) -> IBPState:
-    """One fully-jitted collapsed sweep (ref, or unpacked fast/pallas)."""
+    """One fully-jitted collapsed sweep (ref, or the unified fast/pallas
+    core at the TOP bucket: B = K_max, legacy no-G float path)."""
     N, D = X.shape
     Z, active = state.Z, state.active
     m, ZtZ, ZtX, _ = _sweep_stats(Z, active, X)
     key, ksweep, kalpha, ksx, ksa = jax.random.split(state.key, 5)
 
-    Z, active, ZtZ, ZtX, m, _ = collapsed_row_scan(
+    Z, active, ZtZ, ZtX, m, _, _ = collapsed_row_scan(
         Z, active, ZtZ, ZtX, m, X, ksweep,
         state.alpha, state.sigma_x, state.sigma_a,
         N=float(N), birth="gibbs", backend=backend,
@@ -956,7 +766,7 @@ def _packed_sweep_jit(state, X, hyp, backend, refresh_every, B):
     N, D = X.shape
     m, ZtZ, ZtX, _ = _sweep_stats(state.Z, state.active, X)
     key, ksweep, kalpha, ksx, ksa = jax.random.split(state.key, 5)
-    Z, active, ZtZ2, ZtX2, m2, _, ksweep2, ovf_row = _packed_scan(
+    Z, active, ZtZ2, ZtX2, m2, _, _, ksweep2, ovf_row = _packed_scan(
         state.Z, state.active, ZtZ, ZtX, m, X, ksweep,
         state.alpha, state.sigma_x, state.sigma_a, 0,
         N=float(N), birth="gibbs", B=B, refresh_every=refresh_every,
@@ -1015,7 +825,7 @@ def _collapsed_sweep_packed(
         B = ibm.pick_bucket(buckets, kp, PACK_HEADROOM)
         if seg_log is not None:
             seg_log.append((B, row))
-        Z, active, ZtZ, ZtX, m, _, ksweep, ovf_row = _packed_scan(
+        Z, active, ZtZ, ZtX, m, _, _, ksweep, ovf_row = _packed_scan(
             Z, active, ZtZ, ZtX, m, X, ksweep, alpha, sx, sa, row,
             N=float(N), birth="gibbs", B=B, refresh_every=refresh_every,
             flip_flavor=flavor,
@@ -1041,11 +851,12 @@ def collapsed_sweep(
     """One full collapsed Gibbs sweep over all rows + hyperparameter updates.
 
     ``k_live_buckets`` selects occupancy-adaptive packing for the
-    fast/pallas backends (DESIGN.md §14): ``"on"`` (default) runs the
-    carried factorization on the live K⁺ bucket via the host-dispatched
-    packed scan; ``"off"`` keeps the fully-jitted unpacked carry at
-    K_max (the pre-packing behavior). The ref backend has no carry and
-    ignores the knob.
+    fast/pallas backends (DESIGN.md §12): ``"on"`` (default) runs the
+    unified packed core on the live K⁺ bucket via the host-dispatched
+    packed scan; ``"off"`` runs the SAME core at the top bucket
+    (B = K_max, G carry disabled) in one fully-jitted sweep — bitwise
+    the pre-unification unpacked carry. The ref backend has no carry
+    and ignores the knob.
     """
     if k_live_buckets not in K_LIVE_MODES:
         raise ValueError(

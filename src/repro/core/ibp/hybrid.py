@@ -84,6 +84,9 @@ class HybridGlobal:
     p_prime: Array   # () int32
     it: Array        # () int32
     overflow: Array  # () int32 — promoted-feature drops due to K_max capacity
+    tail_sat: Array  # () int32 — tail rows whose accepted MH birth was
+    #                  vetoed by K_tail capacity (drives adaptive K_tail
+    #                  growth at the driver's restart boundary)
 
 
 @jax.tree_util.register_dataclass
@@ -143,6 +146,7 @@ def init_hybrid(
         p_prime=jnp.asarray(0, jnp.int32),
         it=jnp.asarray(0, jnp.int32),
         overflow=jnp.asarray(0, jnp.int32),
+        tail_sat=jnp.asarray(0, jnp.int32),
     )
     ss = HybridShard(
         Z=Z,
@@ -168,7 +172,7 @@ def _tail_sub_iteration(
     collapsed_backend: str = "ref",
     chol_refresh: int = DEFAULT_REFRESH,
     k_live_pack: bool = False,
-) -> tuple[Array, Array]:
+) -> tuple[Array, Array, Array]:
     """Collapsed Gibbs + MH births on the tail (runs on p' only).
 
     ``collapsed_backend`` selects the row-step implementation (DESIGN.md
@@ -176,25 +180,33 @@ def _tail_sub_iteration(
     matter, but the "pallas" flavor moves the K-sequential bit-flip
     recurrence into the ``collapsed_row`` kernel, keeping the whole tail
     recurrence VMEM-resident on TPU. ``k_live_pack`` (the spec's
-    ``k_live_buckets`` knob) routes the fast/pallas carry through the
-    packed row step — in-jit the block is the full K_tail width, so what
-    the tail gains is the carried G = HHᵀ (DESIGN.md §14).
+    ``k_live_buckets`` knob) selects the unified core's carried-G float
+    path — in-jit the block is the full K_tail width either way, so what
+    the tail gains from ``pack=True`` is the carried G = HHᵀ (DESIGN.md
+    §12).
+
+    Returns (Z_tail, tail_active, n_sat): ``n_sat`` counts rows whose
+    accepted MH birth was vetoed purely by K_tail capacity — the tail-
+    saturation signal driving adaptive K_tail growth.
     """
     # residual given instantiated features = the tail model's data
     R = X_p - (Z * gs.active[None, :]) @ gs.A
     m_t = jnp.sum(Z_tail, axis=0)
     ZtZ_t = Z_tail.T @ Z_tail
     ZtR = Z_tail.T @ R
-    Z_tail, tail_active, _, _, m_t, _ = collapsed_row_scan(
+    # u_chunk_rows=n_rows: this entry is vmapped (chains/shards) — the
+    # chunked refill would lower to select and regenerate per row
+    Z_tail, tail_active, _, _, m_t, _, n_sat = collapsed_row_scan(
         Z_tail, tail_active, ZtZ_t, ZtR, m_t, R, key,
         gs.alpha, gs.sigma_x, gs.sigma_a,
         N=N_global, birth="mh", backend=collapsed_backend,
         refresh_every=chol_refresh, pack=k_live_pack,
+        u_chunk_rows=R.shape[0],
     )
     # prune dead tail columns
     tail_active = tail_active * (m_t > 0.5)
     Z_tail = Z_tail * tail_active[None, :]
-    return Z_tail, tail_active
+    return Z_tail, tail_active, n_sat
 
 
 def shard_sub_iterations(
@@ -210,13 +222,18 @@ def shard_sub_iterations(
     collapsed_backend: str = "ref",
     chol_refresh: int = DEFAULT_REFRESH,
     k_live_pack: bool = False,
-) -> tuple[Array, Array, Array]:
-    """L sub-iterations of the paper's inner loop on one shard."""
+) -> tuple[Array, Array, Array, Array]:
+    """L sub-iterations of the paper's inner loop on one shard.
+
+    Returns (Z, Z_tail, tail_active, n_sat) — ``n_sat`` is the tail-
+    saturation count summed over this shard's tail sub-iterations
+    (nonzero only on p').
+    """
     key_shard = jax.random.fold_in(gs.key, shard_idx)
     is_pprime = shard_idx == gs.p_prime
 
     def one(l, carry):
-        Z, Z_tail, tail_active = carry
+        Z, Z_tail, tail_active, n_sat = carry
         kl = jax.random.fold_in(key_shard, l)
         ku, kt = jax.random.split(kl)
         Z = uncollapsed_sweep(
@@ -224,23 +241,24 @@ def shard_sub_iterations(
         )
 
         def with_tail(args):
-            Z_tail, tail_active = args
-            return _tail_sub_iteration(
+            Z_tail, tail_active, n_sat = args
+            Z_tail, tail_active, sat = _tail_sub_iteration(
                 X_p, Z, Z_tail, tail_active, gs, N_global, kt,
                 collapsed_backend=collapsed_backend,
                 chol_refresh=chol_refresh,
                 k_live_pack=k_live_pack,
             )
+            return Z_tail, tail_active, n_sat + sat
 
-        Z_tail, tail_active = jax.lax.cond(
-            is_pprime, with_tail, lambda a: a, (Z_tail, tail_active)
+        Z_tail, tail_active, n_sat = jax.lax.cond(
+            is_pprime, with_tail, lambda a: a, (Z_tail, tail_active, n_sat)
         )
-        return Z, Z_tail, tail_active
+        return Z, Z_tail, tail_active, n_sat
 
-    Z, Z_tail, tail_active = jax.lax.fori_loop(
-        0, L, one, (Z, Z_tail, tail_active)
+    Z, Z_tail, tail_active, n_sat = jax.lax.fori_loop(
+        0, L, one, (Z, Z_tail, tail_active, jnp.zeros((), jnp.int32))
     )
-    return Z, Z_tail, tail_active
+    return Z, Z_tail, tail_active, n_sat
 
 
 def promote_tail(
@@ -375,9 +393,10 @@ def _hybrid_iteration_body(
         collapsed_backend=collapsed_backend, chol_refresh=chol_refresh,
         k_live_pack=k_live_pack,
     )
-    Z, Z_tail, tail_active = jax.vmap(
+    Z, Z_tail, tail_active, n_sat = jax.vmap(
         sub, in_axes=(0, 0, 0, 0, None, 0)
     )(X_shards, ss.Z, ss.Z_tail, ss.tail_active, gs, jnp.arange(P_))
+    n_sat = jnp.sum(n_sat)  # only p' contributes
 
     # ---- master sync (simulated psum = sum over shard axis)
     tail_g = jnp.sum(tail_active, axis=0)  # only p' is nonzero
@@ -405,6 +424,7 @@ def _hybrid_iteration_body(
         key=jax.random.fold_in(gs.key, 7),
         p_prime=p_prime, it=gs.it + 1,
         overflow=gs.overflow + n_drop,
+        tail_sat=gs.tail_sat + n_sat,
     )
     ss_new = HybridShard(
         Z=Z,
@@ -464,9 +484,12 @@ def _hybrid_stale_body(
     sub = partial(shard_sub_iterations, N_global=N_g, L=L, backend=backend,
                   collapsed_backend=collapsed_backend,
                   chol_refresh=chol_refresh, k_live_pack=k_live_pack)
-    Z, Z_tail, tail_active = jax.vmap(
+    Z, Z_tail, tail_active, _ = jax.vmap(
         sub, in_axes=(0, 0, 0, 0, None, 0)
     )(X_shards, ss.Z, ss.Z_tail, ss.tail_active, gs_sweep, jnp.arange(P_))
+    # stale passes don't touch gs — saturation on them is uncounted (the
+    # pass is explicitly non-exact; the counter stays a sync-boundary
+    # quantity)
     gs_out = dataclasses.replace(gs, key=jax.random.fold_in(gs.key, 14))
     return gs_out, HybridShard(Z=Z, Z_tail=Z_tail, tail_active=tail_active)
 
@@ -606,7 +629,7 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
         def call(X, gs: HybridGlobal, Z, Z_tail, tail_active):
             D = X.shape[-1]
 
-            def finish(gs, A, pi, active, sse, n_drop, Zt_p, ta_p):
+            def finish(gs, A, pi, active, sse, n_drop, n_sat, Zt_p, ta_p):
                 sigma_x, sigma_a, alpha, p_prime = master_step2(
                     sse, A, active, gs, hyp, N_g, D, P_
                 )
@@ -616,6 +639,7 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
                     key=jax.random.fold_in(gs.key, 7),
                     p_prime=p_prime, it=gs.it + 1,
                     overflow=gs.overflow + n_drop,
+                    tail_sat=gs.tail_sat + n_sat,
                 )
                 return gs_new, jnp.zeros_like(Zt_p), jnp.zeros_like(ta_p)
 
@@ -625,7 +649,7 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
                 gs_sweep = dataclasses.replace(
                     gs, key=jax.random.fold_in(gs.key, 13)
                 )
-                Z_p, Zt_p, ta = shard_sub_iterations(
+                Z_p, Zt_p, ta, _ = shard_sub_iterations(
                     X_p, Z_p, Zt_p, ta, gs_sweep, idx, N_g, L, be, cb, cr,
                     pk,
                 )
@@ -637,10 +661,10 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
             def block_staged(X_p, gs, Z_p, Zt_p, ta_p):
                 ta = ta_p[0]  # (1, K_tail) local block -> (K_tail,)
                 idx = compat.axis_index(data_axes)
-                Z_p, Zt_p2, ta = shard_sub_iterations(
+                Z_p, Zt_p2, ta, n_sat = shard_sub_iterations(
                     X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, be, cb, cr, pk
                 )
-                tail_g = jax.lax.psum(ta, data_axes)                # AR 1
+                tail_g, n_sat_g = jax.lax.psum((ta, n_sat), data_axes)  # AR 1
                 Z_p, active_new, n_drop = promote_tail(Z_p, Zt_p2, tail_g,
                                                        gs.active)
                 stats = local_stats(X_p, Z_p)
@@ -651,13 +675,13 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
                 sse = jax.lax.psum(                                  # AR 3
                     local_sse(X_p, Z_p, A, active), data_axes)
                 gs_new, Zt0, ta0 = finish(gs, A, pi, active, sse, n_drop,
-                                          Zt_p, ta_p)
+                                          n_sat_g, Zt_p, ta_p)
                 return gs_new, Z_p, Zt0, ta0
 
             def block_fused(X_p, gs, Z_p, Zt_p, ta_p):
                 ta = ta_p[0]
                 idx = compat.axis_index(data_axes)
-                Z_p, Zt_p2, ta = shard_sub_iterations(
+                Z_p, Zt_p2, ta, n_sat = shard_sub_iterations(
                     X_p, Z_p, Zt_p, ta, gs, idx, N_g, L, be, cb, cr, pk
                 )
                 K_max = Z_p.shape[1]
@@ -667,12 +691,15 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
                 # every shard re-derives after the reduce)
                 Z_stats, _, _ = promote_tail(Z_p, Zt_p2, ta, gs.active)
                 stats = local_stats(X_p, Z_stats)
+                # the saturation count rides the single payload as a
+                # float scalar (small exact integers — f32-exact)
                 payload = jnp.concatenate([
                     stats["ZtZ"].reshape(-1),
                     stats["ZtX"].reshape(-1),
                     stats["m"],
                     ta,
                     jnp.sum(X_p * X_p)[None],
+                    n_sat.astype(X_p.dtype)[None],
                 ])
                 g = jax.lax.psum(payload, data_axes)                # AR (only)
                 o1 = K_max * K_max
@@ -681,7 +708,8 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
                 ZtX = g[o1:o2].reshape(K_max, X_p.shape[1])
                 m_g = g[o2:o2 + K_max]
                 tail_g = g[o2 + K_max:o2 + K_max + K_tail]
-                xx = g[-1]
+                xx = g[-2]
+                n_sat_g = g[-1].astype(jnp.int32)
                 Z_p, active_new, n_drop = promote_tail(Z_p, Zt_p2, tail_g,
                                                        gs.active)
                 A, pi, active, m = master_step1(
@@ -694,7 +722,7 @@ def _build_mesh_fns(spec, hyp, N_g: float, mesh,
                 ZtZm = ZtZ * ibm.mask_outer(active)
                 sse = xx - 2.0 * jnp.sum(A * ZtXm) + jnp.sum(A * (ZtZm @ A))
                 gs_new, Zt0, ta0 = finish(gs, A, pi, active, sse, n_drop,
-                                          Zt_p, ta_p)
+                                          n_sat_g, Zt_p, ta_p)
                 return gs_new, Z_p, Zt0, ta0
 
             def block_vmap_data(X_full, gs, Z_c, Zt_c, ta_c):

@@ -21,8 +21,15 @@ Kernel knobs (all spec-validated; see DESIGN.md §12–§14):
   --chol-refresh INT              fast-path exact-refactor cadence
   --k-live-buckets on|off         occupancy-adaptive packing of the
                                   collapsed carry (default on; off =
-                                  unpacked K_max carry, the pre-§14
-                                  behavior)
+                                  the same unified core pinned to the
+                                  top bucket B = K_max — bitwise the
+                                  historical unpacked carry)
+  --K-tail INT                    in-flight tail features on p'
+                                  (must be <= K_max)
+  --k-tail-grow INT               adaptive K_tail: max automatic tail
+                                  doublings at checkpoint boundaries
+                                  when tail saturation accrues
+                                  (0 = fixed K_tail; ceiling K_max)
   --sync staged|fused             master-sync collective schedule
   --stale-sync INT                bounded-staleness passes (non-exact)
 
@@ -56,6 +63,15 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=1000)
     ap.add_argument("--L", type=int, default=5)
     ap.add_argument("--K-max", type=int, default=32)
+    ap.add_argument("--K-tail", type=int, default=8,
+                    help="in-flight tail features on shard p' (the "
+                         "collapsed-birth truncation; <= K_max)")
+    ap.add_argument("--k-tail-grow", type=int, default=0,
+                    help="adaptive K_tail: maximum automatic tail "
+                         "doublings at checkpoint boundaries when the "
+                         "tail-saturation counter (eval record "
+                         "'tail_sat') accrues; 0 = fixed K_tail, "
+                         "ceiling is K_max (DESIGN.md §12)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sigma-n", type=float, default=0.5)
     ap.add_argument("--ckpt-dir", default="artifacts/ckpt/mcmc")
@@ -113,7 +129,8 @@ def main(argv=None):
     # loudly under a chainless driver; the default never does
     default_chains = {"multichain": 4, "mesh": 2}.get(args.driver, 1)
     spec = SamplerSpec(
-        P=args.P, K_max=args.K_max, L=args.L, n_iters=args.iters,
+        P=args.P, K_max=args.K_max, K_tail=args.K_tail,
+        k_tail_grow=args.k_tail_grow, L=args.L, n_iters=args.iters,
         eval_every=args.eval_every, ckpt_dir=args.ckpt_dir, seed=args.seed,
         backend=args.backend, chains=chains, data=data,
         n_chains=(args.chains if args.chains is not None else default_chains),
@@ -133,6 +150,10 @@ def main(argv=None):
             f"alpha={r['alpha']:.2f} sx={r['sigma_x']:.3f} "
             f"ll_eval={r.get('joint_ll_eval', float('nan')):.1f}"
         )
+        if "K_tail" in r:
+            line += f" Ktail={r['K_tail']}"
+            if r.get("tail_sat", 0):
+                line += f" sat={r['tail_sat']}"
         import math
         if "sigma_x_rhat" in r and math.isfinite(r["sigma_x_rhat"]):
             line += (f" rhat(sx)={r['sigma_x_rhat']:.3f}"

@@ -102,6 +102,7 @@ class DriverConfig:
     n_chains: int = 1          # chain count (multichain / mesh)
     sync: str = "staged"       # "staged" | "fused" master sync (collective)
     overflow_every: int = 8    # overflow-detection cadence (host sync)
+    k_tail_grow: int = 0       # adaptive K_tail: max tail doublings (0=off)
     collapsed_backend: str = "fast"  # "ref" | "fast" | "pallas" tail step
     chol_refresh: int = DEFAULT_CHOL_REFRESH  # "fast"/"pallas" cadence
     k_live_buckets: str = "on"  # occupancy-adaptive packing (DESIGN.md §14)
@@ -124,7 +125,8 @@ class DriverConfig:
             sync=self.sync, stale_sync=self.stale_sync,
             n_iters=self.n_iters, eval_every=self.eval_every,
             ckpt_every=self.ckpt_every, ckpt_dir=self.ckpt_dir,
-            overflow_every=self.overflow_every, seed=self.seed,
+            overflow_every=self.overflow_every,
+            k_tail_grow=self.k_tail_grow, seed=self.seed,
             harvest_every=self.harvest_every,
             harvest_burn=self.harvest_burn, bank_path=self.bank_path,
         )
@@ -167,6 +169,11 @@ class MCMCDriver:
         self.bank_builder = (BankBuilder(spec.K_max)
                              if spec.harvest_every > 0 else None)
         self._bank: SampleBank | None = None
+        # adaptive K_tail (DESIGN.md §12): doublings performed so far and
+        # the tail_sat watermark at the last checkpoint boundary — growth
+        # fires only on NEW saturation since that boundary
+        self._tail_growths = 0
+        self._sat_mark = 0
 
     # ---- state <-> checkpoint layout (global Z for elastic resharding) ----
     def _to_ckpt(self, gs: HybridGlobal, ss: HybridShard) -> dict:
@@ -313,6 +320,39 @@ class MCMCDriver:
             return None
         return bank.save(self.bank_path)
 
+    # ---- adaptive K_tail (DESIGN.md §12) ----------------------------------
+    def _maybe_grow_tail(self, gs: HybridGlobal, ss: HybridShard):
+        """Double K_tail when NEW tail saturation accrued since the last
+        checkpoint boundary (capacity-vetoed accepted births on p' —
+        gs.tail_sat), bounded by ``k_tail_grow`` doublings and the K_max
+        ceiling. Runs exactly at a post-sync checkpoint boundary: tails
+        are always cleared there, so the sampler is rebuilt in-process
+        with EMPTY tail buffers at the new width and the posterior state
+        is untouched — growth is a pure widening of future exploration,
+        not a restart. The counter resets so the next decision sees only
+        post-growth saturation. Returns (gs, ss, grew)."""
+        spec = self.spec
+        sat = int(jnp.max(gs.tail_sat))
+        grew = False
+        if (self._tail_growths < spec.k_tail_grow
+                and spec.K_tail < spec.K_max and sat > self._sat_mark):
+            new_tail = min(2 * spec.K_tail, spec.K_max)
+            spec = spec.replace(K_tail=new_tail)
+            self.spec = self.cfg = spec
+            self.sampler = build_sampler(spec, self.hyp, self.X_global)
+            *lead, P, N_p, _ = ss.Z.shape
+            ss = HybridShard(
+                Z=ss.Z,
+                Z_tail=jnp.zeros((*lead, P, N_p, new_tail), ss.Z.dtype),
+                tail_active=jnp.zeros((*lead, P, new_tail), ss.Z.dtype),
+            )
+            gs = dataclasses.replace(gs,
+                                     tail_sat=jnp.zeros_like(gs.tail_sat))
+            self._tail_growths += 1
+            grew = True
+        self._sat_mark = int(jnp.max(gs.tail_sat))
+        return gs, ss, grew
+
     # ---- main loop --------------------------------------------------------
     def run(self, n_iters: int | None = None,
             on_eval: Callable[[dict], None] | None = None,
@@ -394,6 +434,17 @@ class MCMCDriver:
                 if self.bank_builder is not None and len(self.bank_builder):
                     self.save_bank()
                 save_pytree(spec.ckpt_dir, self._to_ckpt(gs, ss), it + 1)
+                # adaptive K_tail rides the checkpoint boundary (the one
+                # place tails are provably empty): saturation since the
+                # last boundary doubles the tail width in-process — the
+                # just-written checkpoint stays valid (tails are not
+                # serialized; a restart re-grows if saturation returns)
+                if spec.k_tail_grow > 0 and not last and not overflowed:
+                    gs, ss, grew = self._maybe_grow_tail(gs, ss)
+                    if grew:
+                        spec = self.spec
+                        sampler = self.sampler
+                        st = sampler.from_canonical(ss)
             if overflowed:
                 # capacity growth: checkpoint + restart with larger K_max.
                 # the bank is saved too (bank-first, as above) — the
@@ -458,6 +509,10 @@ class MCMCDriver:
                 "sigma_x_chains": [float(s) for s in np.asarray(gs.sigma_x)],
                 "joint_ll_train": float(jnp.mean(lls)),
                 "joint_ll_train_chains": [float(l) for l in np.asarray(lls)],
+                "K_tail": int(self.spec.K_tail),
+                "tail_sat": int(jnp.max(gs.tail_sat)),
+                "tail_sat_chains": [int(s)
+                                    for s in np.asarray(gs.tail_sat)],
             }
             if self.X_eval is not None:
                 ev = jax.vmap(
@@ -478,6 +533,8 @@ class MCMCDriver:
                 "joint_ll_train": float(train_joint_loglik(
                     X, Z, gs.A, gs.pi, gs.active, gs.sigma_x
                 )),
+                "K_tail": int(self.spec.K_tail),
+                "tail_sat": int(gs.tail_sat),
             }
             if self.X_eval is not None:
                 rec["joint_ll_eval"] = float(heldout_joint_loglik(

@@ -1,0 +1,128 @@
+"""BENCH_*.json schema lint + unified-core no-regression gate
+(benchmarks/bench_schema.py, wired into `benchmarks.run --smoke`)."""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks import bench_schema as bs
+
+REPO_BENCH = sorted(
+    p for p in os.listdir(bs.REPO_ROOT) if p.startswith("BENCH_")
+)
+
+
+@pytest.fixture()
+def committed():
+    """The committed trajectory file — must exist and parse."""
+    assert REPO_BENCH, "repo must carry a BENCH_*.json trajectory"
+    with open(os.path.join(bs.REPO_ROOT, REPO_BENCH[-1])) as fh:
+        return json.load(fh)
+
+
+def test_committed_trajectory_is_clean(committed):
+    assert bs.lint_payload(committed) == []
+    assert bs.lint_repo() == []
+
+
+def test_lint_fails_closed_on_missing_files(tmp_path):
+    errs = bs.lint_repo(str(tmp_path))
+    assert len(errs) == 1 and "fail closed" in errs[0]
+
+
+def test_unknown_section_rejected(committed):
+    bad = dict(committed, surprise_section=[{"x": 1}])
+    errs = bs.lint_payload(bad)
+    assert any("unregistered section" in e for e in errs)
+
+
+def test_missing_required_key_rejected(committed):
+    bad = copy.deepcopy(committed)
+    del bad["collapsed_sweep"]["results"][0]["speedup"]
+    errs = bs.lint_payload(bad)
+    assert any("missing required key 'speedup'" in e for e in errs)
+
+
+def test_nonfinite_and_nonpositive_metrics_rejected(committed):
+    bad = copy.deepcopy(committed)
+    bad["occupancy_sweep"]["results"][0]["packed_rows_per_s"] = float("nan")
+    bad["collapsed_sweep"]["results"][0]["ref_rows_per_s"] = 0.0
+    errs = bs.lint_payload(bad)
+    assert any("non-finite" in e for e in errs)
+    assert any("non-positive" in e for e in errs)
+
+
+def test_empty_row_list_rejected(committed):
+    bad = copy.deepcopy(committed)
+    bad["collapsed_sweep"]["results"] = []
+    errs = bs.lint_payload(bad)
+    assert any("empty row list" in e for e in errs)
+
+
+def test_wrong_type_rejected(committed):
+    bad = copy.deepcopy(committed)
+    bad["device_count"] = "two"
+    errs = bs.lint_payload(bad)
+    assert any("device_count" in e for e in errs)
+
+
+def test_unreadable_file_reported(tmp_path):
+    (tmp_path / "BENCH_2026-01-01.json").write_text("{not json")
+    errs = bs.lint_repo(str(tmp_path))
+    assert len(errs) == 1 and "unreadable" in errs[0]
+
+
+# --- unified-core no-regression gate (DESIGN.md §12) -----------------------
+
+
+def test_gate_passes_at_recorded_speed(committed):
+    cur = committed["occupancy_sweep"]
+    assert bs.unpacked_core_regression(cur) == []
+
+
+def test_gate_trips_on_top_bucket_slowdown(committed):
+    """Unpacked (top-bucket unified core) losing ground RELATIVE to the
+    same-run packed timing is the regression signature."""
+    cur = copy.deepcopy(committed["occupancy_sweep"])
+    for r in cur["results"]:
+        r["unpacked_rows_per_s"] *= 0.4
+    errs = bs.unpacked_core_regression(cur)
+    assert len(errs) == len(cur["results"])
+    assert all("unified core regressed" in e for e in errs)
+
+
+def test_gate_ignores_uniform_machine_slowdown(committed):
+    """A loaded CI box slows BOTH modes — the load-invariant ratio must
+    not trip (the fast>=2x-ref same-run gate owns uniform slowdowns)."""
+    cur = copy.deepcopy(committed["occupancy_sweep"])
+    for r in cur["results"]:
+        r["unpacked_rows_per_s"] *= 0.35
+        r["packed_rows_per_s"] *= 0.35
+    assert bs.unpacked_core_regression(cur) == []
+
+
+def test_gate_fails_closed_without_comparable_rows(committed, tmp_path):
+    cur = committed["occupancy_sweep"]
+    # no recorded trajectory at all
+    errs = bs.unpacked_core_regression(cur, root=str(tmp_path))
+    assert errs and "fail closed" in errs[0]
+    # recorded file exists but at different sizes -> not comparable
+    other = copy.deepcopy(committed)
+    other["occupancy_sweep"]["N"] = committed["occupancy_sweep"]["N"] * 2
+    (tmp_path / "BENCH_2026-01-01.json").write_text(json.dumps(other))
+    errs = bs.unpacked_core_regression(cur, root=str(tmp_path))
+    assert errs and "fail closed" in errs[0]
+    # and an empty current sweep can never pass vacuously
+    errs = bs.unpacked_core_regression({}, root=str(tmp_path))
+    assert errs and "fail closed" in errs[0]
+
+
+def test_gate_skips_todays_merge_target(committed, tmp_path):
+    """The file this run merges into must not serve as its own baseline."""
+    (tmp_path / "BENCH_2026-02-02.json").write_text(json.dumps(committed))
+    cur = committed["occupancy_sweep"]
+    errs = bs.unpacked_core_regression(cur, root=str(tmp_path),
+                                       skip_date="2026-02-02")
+    assert errs and "fail closed" in errs[0]  # only file was skipped
+    assert bs.unpacked_core_regression(cur, root=str(tmp_path)) == []

@@ -164,8 +164,8 @@ def _scan_kwargs(X, seed=0, K_max=12):
 
 def test_ref_backend_reports_zero_refreshes(data):
     args = _scan_kwargs(data)
-    *_, n_refresh = collapsed_row_scan(*args, N=float(data.shape[0]),
-                                       backend="ref")
+    *_, n_refresh, _ = collapsed_row_scan(*args, N=float(data.shape[0]),
+                                          backend="ref")
     assert int(n_refresh) == 0
 
 
@@ -177,18 +177,18 @@ def test_drift_monitor_triggers_refresh_when_distrusted(data):
     args = _scan_kwargs(data)
 
     # cadence-only baseline: huge tolerance, cadence 25 -> ~N/25 refreshes
-    *_, n_cadence = collapsed_row_scan(
+    *_, n_cadence, _ = collapsed_row_scan(
         *args, N=float(N), backend="fast", refresh_every=25, drift_tol=1e9)
     assert int(n_cadence) == N // 25, int(n_cadence)
 
     # distrust the carry completely: every probed row triggers
-    *_, n_forced = collapsed_row_scan(
+    *_, n_forced, _ = collapsed_row_scan(
         *args, N=float(N), backend="fast", refresh_every=10**6,
         drift_tol=0.0)
     assert int(n_forced) >= N // PROBE_EVERY, int(n_forced)
 
     # healthy carry, no cadence: the monitor stays quiet over a short scan
-    *_, n_quiet = collapsed_row_scan(
+    *_, n_quiet, _ = collapsed_row_scan(
         *args, N=float(N), backend="fast", refresh_every=10**6,
         drift_tol=1e-2)
     assert int(n_quiet) <= 2, int(n_quiet)
@@ -200,11 +200,11 @@ def test_drift_monitor_works_under_pack(data):
     the probe cadence; a healthy packed carry stays quiet."""
     N = data.shape[0]
     args = _scan_kwargs(data)
-    *_, n_forced = collapsed_row_scan(
+    *_, n_forced, _ = collapsed_row_scan(
         *args, N=float(N), backend="fast", refresh_every=10**6,
         drift_tol=0.0, pack=True)
     assert int(n_forced) >= N // PROBE_EVERY, int(n_forced)
-    *_, n_quiet = collapsed_row_scan(
+    *_, n_quiet, _ = collapsed_row_scan(
         *args, N=float(N), backend="fast", refresh_every=10**6,
         drift_tol=1e-2, pack=True)
     assert int(n_quiet) <= 2, int(n_quiet)
@@ -247,3 +247,56 @@ def test_packed_scan_uniform_chunking_is_bitwise(data):
     for chunk in (16, 4096):
         for a, b in zip(outs[3], outs[chunk]):
             np.testing.assert_array_equal(a, b)
+
+
+def test_packed_resume_bitwise_at_chunk_boundary():
+    """Satellite regression: the overflow-repack resume re-reads its
+    uniforms POSITIONALLY — when the overflow row lands exactly on a
+    u_chunk_rows boundary (the resumed row's draw sits at the first slot
+    of a refilled block, and the overflowing attempt itself triggered
+    the refill), the chunked re-read must be bitwise identical to the
+    unchunked hoist. The chunk sizes are derived from the actual
+    overflow rows so each resume start IS a block boundary."""
+    from repro.core.ibp.collapsed import (PACK_HEADROOM, _packed_scan,
+                                          _sweep_stats)
+
+    rng = np.random.default_rng(0)
+    Zt = (rng.random((120, 12)) < 0.4).astype(np.float32)
+    At = rng.standard_normal((12, 24)).astype(np.float32) * 1.5
+    X = jnp.asarray(Zt @ At
+                    + 0.3 * rng.standard_normal((120, 24)).astype(np.float32))
+    N = 120
+    st = init_state(jax.random.key(0), N, 24, K_max=32, K_init=1, alpha=8.0)
+    buckets = ibm.live_buckets(32)
+
+    def sweep(u_chunk):
+        m, ZtZ, ZtX, kp = _sweep_stats(st.Z, st.active, X)
+        Z, active = st.Z, st.active
+        key = jax.random.fold_in(st.key, 1)
+        row, segs = 0, []
+        kp = int(kp)
+        while row < N:
+            B = ibm.pick_bucket(buckets, kp, PACK_HEADROOM)
+            segs.append((B, row))
+            Z, active, ZtZ, ZtX, m, _, _, key, ovf_row = _packed_scan(
+                Z, active, ZtZ, ZtX, m, X, key, st.alpha, st.sigma_x,
+                st.sigma_a, row, N=float(N), birth="gibbs", B=B,
+                refresh_every=8, u_chunk_rows=u_chunk)
+            ovf, kp = map(int, jax.device_get((ovf_row, jnp.sum(active))))
+            row = N if ovf < 0 else ovf
+        return segs, (Z, active, ZtZ, ZtX, m)
+
+    segs_ref, out_ref = sweep(4096)          # one block covers every segment
+    starts = [r for _, r in segs_ref if r > 0]
+    assert starts, "setup no longer overflows mid-sweep; rechoose data"
+    # chunk sizes that put each resume start exactly on a block boundary
+    chunks = sorted({r for r in starts}
+                    | {b - a for a, b in zip(starts, starts[1:]) if b > a})
+    for c in chunks:
+        segs_c, out_c = sweep(c)
+        assert segs_c == segs_ref, (c, segs_c, segs_ref)
+        for name, x, y in zip(("Z", "active", "ZtZ", "ZtX", "m"),
+                              out_ref, out_c):
+            np.testing.assert_array_equal(
+                np.asarray(x), np.asarray(y),
+                err_msg=f"{name} diverged at u_chunk_rows={c}")

@@ -24,7 +24,7 @@ def test_kmax_overflow_checkpoints_then_grows(data, tmp_path):
     """Feature-slot overflow checkpoints + raises; restarting with a larger
     K_max pads the checkpointed feature axis and resumes (never silent
     truncation) — DESIGN.md §10."""
-    cfg = DriverConfig(P=3, K_max=2, K_tail=6, K_init=1, L=3, n_iters=40,
+    cfg = DriverConfig(P=3, K_max=2, K_tail=2, K_init=1, L=3, n_iters=40,
                       ckpt_every=1000, eval_every=1000,
                       ckpt_dir=str(tmp_path))
     with pytest.raises(RuntimeError, match="overflow"):
@@ -198,3 +198,41 @@ def test_multichain_resume_rejects_changed_chain_count(data, tmp_path):
     MCMCDriver(data, mk(3, 4), IBPHypers()).run()
     with pytest.raises(ValueError, match="n_chains"):
         MCMCDriver(data, mk(8, 8), IBPHypers()).run()
+
+
+def test_adaptive_k_tail_grows_on_saturation(tmp_path):
+    """k_tail_grow > 0: tail saturation (capacity-vetoed accepted MH
+    births, gs.tail_sat) at a checkpoint boundary doubles K_tail
+    in-process — the run continues with wider tail buffers, the ceiling
+    is K_max, and eval records surface K_tail + tail_sat."""
+    rng = np.random.default_rng(0)
+    Zt = (rng.random((60, 10)) < 0.4).astype(np.float32)
+    At = rng.standard_normal((10, 16)).astype(np.float32) * 1.5
+    X = Zt @ At + 0.3 * rng.standard_normal((60, 16)).astype(np.float32)
+    cfg = DriverConfig(P=3, K_max=16, K_tail=1, K_init=1, L=3, n_iters=30,
+                       ckpt_every=5, eval_every=10, k_tail_grow=3,
+                       alpha=8.0, ckpt_dir=str(tmp_path))
+    drv = MCMCDriver(X, cfg, IBPHypers())
+    gs, ss = drv.run()
+    assert int(gs.it) == 30                       # ran to completion
+    assert drv.spec.K_tail > 1                    # growth actually fired
+    assert drv.spec.K_tail <= cfg.K_max
+    assert ss.Z_tail.shape[-1] == drv.spec.K_tail  # buffers follow the spec
+    rec = drv.history[-1]
+    assert rec["K_tail"] == drv.spec.K_tail
+    assert rec["tail_sat"] >= 0
+    assert drv._tail_growths <= cfg.k_tail_grow
+
+
+def test_k_tail_fixed_when_grow_disabled(data, tmp_path):
+    """k_tail_grow=0 (default): saturation may accrue but K_tail never
+    moves — the historical fixed-truncation behavior."""
+    cfg = DriverConfig(P=3, K_max=12, K_tail=2, K_init=2, L=3, n_iters=12,
+                       ckpt_every=4, eval_every=6, alpha=6.0,
+                       ckpt_dir=str(tmp_path))
+    drv = MCMCDriver(data, cfg, IBPHypers())
+    gs, ss = drv.run()
+    assert drv.spec.K_tail == 2
+    assert ss.Z_tail.shape[-1] == 2
+    assert drv.history[-1]["K_tail"] == 2
+    assert "tail_sat" in drv.history[-1]

@@ -62,6 +62,10 @@ INVALID_SPECS = [
     (dict(L=0), "L="),
     (dict(K_max=0), "K_max"),
     (dict(K_tail=0), "K_tail"),
+    (dict(K_tail=64), "K_tail"),               # > K_max default 32: tail
+    #                                            promotion needs free slots
+    (dict(K_max=4, K_tail=8), "exceeds"),
+    (dict(k_tail_grow=-1), "k_tail_grow"),
     (dict(K_init=33), "K_init"),               # > K_max default 32
     (dict(K_init=-1), "K_init"),
     (dict(stale_sync=-1), "stale_sync"),       # used to skip silently

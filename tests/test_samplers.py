@@ -134,3 +134,53 @@ def test_hybrid_pallas_backend_matches_jnp_statistically():
         outs[backend] = (int(gs.active.sum()), float(gs.sigma_x))
     assert abs(outs["jnp"][0] - outs["pallas"][0]) <= 2
     assert abs(outs["jnp"][1] - outs["pallas"][1]) < 0.15
+
+
+def test_promote_tail_full_occupancy_drops_not_corrupts():
+    """Regression (spec bugfix companion): promoting a live tail into a
+    FULLY-occupied instantiated set must drop every tail feature — and
+    must not scribble on live columns or the active mask. (The spec now
+    rejects K_tail > K_max outright, so full occupancy is the only way
+    promotion can run out of slots.)"""
+    from repro.core.ibp.hybrid import promote_tail
+
+    rng = np.random.default_rng(5)
+    N_p, K_max, K_tail = 12, 6, 4
+    Z = jnp.asarray((rng.random((N_p, K_max)) < 0.5).astype(np.float32))
+    active = jnp.ones((K_max,), jnp.float32)          # no free slots
+    Z_tail = jnp.asarray(
+        (rng.random((N_p, K_tail)) < 0.5).astype(np.float32))
+    tail_g = jnp.asarray([1.0, 1.0, 0.0, 1.0], jnp.float32)
+    Z_new, active_new, n_drop = promote_tail(Z, Z_tail, tail_g, active)
+    assert int(n_drop) == 3                           # every live tail dropped
+    np.testing.assert_array_equal(np.asarray(Z_new), np.asarray(Z))
+    np.testing.assert_array_equal(np.asarray(active_new), np.asarray(active))
+
+
+def test_promote_tail_partial_occupancy_keeps_what_fits():
+    """With fewer free slots than live tails, the lowest-rank tails land
+    in the free slots (existing live columns untouched) and the overflow
+    is counted in n_drop."""
+    from repro.core.ibp.hybrid import promote_tail
+
+    rng = np.random.default_rng(6)
+    N_p, K_max = 10, 5
+    Z = jnp.asarray((rng.random((N_p, K_max)) < 0.5).astype(np.float32))
+    active = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0], jnp.float32)  # 2 free
+    Z_keep = Z * active[None, :]
+    Z = Z_keep                                        # dead cols are zero
+    Z_tail = jnp.asarray((rng.random((N_p, 3)) < 0.5).astype(np.float32))
+    tail_g = jnp.ones((3,), jnp.float32)              # 3 live tails, 2 fit
+    Z_new, active_new, n_drop = promote_tail(Z, Z_tail, tail_g, active)
+    assert int(n_drop) == 1
+    np.testing.assert_array_equal(np.asarray(active_new),
+                                  np.ones((K_max,), np.float32))
+    # promoted columns landed in the free slots (1 and 4), in tail order
+    np.testing.assert_array_equal(np.asarray(Z_new[:, 1]),
+                                  np.asarray(Z_tail[:, 0]))
+    np.testing.assert_array_equal(np.asarray(Z_new[:, 4]),
+                                  np.asarray(Z_tail[:, 1]))
+    # live columns untouched
+    for k in (0, 2, 3):
+        np.testing.assert_array_equal(np.asarray(Z_new[:, k]),
+                                      np.asarray(Z_keep[:, k]))

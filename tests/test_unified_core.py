@@ -1,0 +1,306 @@
+"""Bitwise certification of the core unification (DESIGN.md §12).
+
+The legacy unpacked fast row step (``_row_step_fast`` + ``_FastCarry``)
+was deleted when the packed scan became THE single implementation of
+the carried collapsed row step: ``k_live_buckets="off"`` (and the
+in-jit ``collapsed_row_scan(pack=False)`` route) now run ``_packed_scan``
+at the TOP bucket — B = K_max, identity column permutation, G carry
+disabled — which is claimed to be BITWISE-identical to the deleted
+code, not merely decision-equivalent within a mismatch budget.
+
+This test pins that claim: the deleted row step is embedded below
+VERBATIM (from the pre-unification revision; the only adaptation is
+the extra ``sat`` output of ``_sample_dishes``, which consumes no
+randomness) and scanned against ``collapsed_row_scan(backend="fast",
+pack=False)`` on the seed grid. Every array in the carry — Z, active,
+the integer sufficient statistics, AND the float m — must agree
+exactly, across multiple chained scans (so refresh, drop and birth
+paths are all exercised), for both birth flavors.
+"""
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ibp import init_state
+from repro.core.ibp import math as ibm
+from repro.core.ibp.collapsed import (
+    PROBE_EVERY,
+    _exact_factor,
+    _sample_dishes,
+    collapsed_row_scan,
+)
+from repro.data import cambridge_data
+from repro.kernels.collapsed_row import collapsed_row_flip
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# The DELETED legacy unpacked fast row step, embedded verbatim as the
+# reference this test certifies against. Do not "improve" this code: its
+# value is that it is the exact pre-unification float path.
+# --------------------------------------------------------------------------
+class _FastCarry(NamedTuple):
+    Z: Array
+    active: Array
+    ZtZ: Array
+    ZtX: Array
+    m: Array
+    Lt: Array
+    M: Array
+    H: Array
+    since: Array
+    n_refresh: Array
+    key: Array
+
+
+def _row_step_fast(carry: _FastCarry, n, *, X, N, D, birth, alpha, sx, sa,
+                   refresh_every, drift_tol, flip_flavor):
+    Z, active, ZtZ, ZtX, m, Lt, M, H, since, n_refresh, key = carry
+    x_n = X[n]
+    z_old = Z[n]
+    ratio = (sx / sa) ** 2
+    m_minus = m - z_old
+    zu = z_old * active
+    w = M @ zu
+    p_down = Lt @ w
+    down_ok = jnp.all(1.0 - jnp.cumsum(p_down * p_down) > 1e-12)
+    gamma = jnp.dot(zu, w)
+    delta_s = jnp.maximum(1.0 - gamma, 1e-6)
+    zH = zu @ H
+    wr = w / jnp.sqrt(delta_s)
+    wd = w / delta_s
+    M1 = M + jnp.outer(wr, wr)
+    H1 = H + jnp.outer(wd, zH - x_n)
+    drop = active * (m_minus <= 0.5)
+    z = z_old * (1.0 - drop)
+    active_m = active * (1.0 - drop)
+    has_drop = jnp.any(drop > 0.5)
+
+    def do_drop(ops):
+        M1, H1 = ops
+        keep2 = ibm.mask_outer(active_m)
+        return M1 * keep2, H1 * active_m[:, None]
+
+    M1, H1 = jax.lax.cond(has_drop, do_drop, lambda ops: ops, (M1, H1))
+
+    def do_probe(_):
+        tm = ZtZ @ active_m - z_old * jnp.dot(z_old, active_m)
+        probe_t = active_m * tm + ratio * active_m
+        return jnp.max(jnp.abs(M1 @ probe_t - active_m))
+
+    drift = jax.lax.cond(
+        since % PROBE_EVERY == 0, do_probe, lambda _: jnp.zeros((), X.dtype),
+        None,
+    )
+    need = (since >= refresh_every - 1) | (~down_ok) | (~(drift <= drift_tol))
+
+    def do_refresh(_):
+        ZtZ_m = ZtZ - jnp.outer(z_old, z_old)
+        ZtX_m = ZtX - jnp.outer(z_old, x_n)
+        L2, M2 = ibm.chol_inv(ibm.padded_W(ZtZ_m, active_m, ratio))
+        M2 = M2 * ibm.mask_outer(active_m)
+        return L2.T, M2, M2 @ (ZtX_m * active_m[:, None])
+
+    Lt_rm, M1, H1 = jax.lax.cond(
+        need, do_refresh, lambda _: (Lt, M1, H1), None
+    )
+    since = jnp.where(need, 0, since + 1)
+    n_refresh = n_refresh + need.astype(n_refresh.dtype)
+
+    inv2s2 = 0.5 / (sx**2)
+    K = Z.shape[1]
+    key, kbits, kdish, kslot = jax.random.split(key, 4)
+    uu = jnp.clip(jax.random.uniform(kbits, (K,), dtype=X.dtype), 1e-7,
+                  1.0 - 1e-7)
+    u = jnp.log(uu) - jnp.log1p(-uu)
+
+    def vqm_closed(_):
+        gd = gamma / delta_s
+        return wd, gd, zH + gd * (zH - x_n)
+
+    def vqm_matvec(_):
+        v = M1 @ z
+        return v, jnp.dot(z, v), z @ H1
+
+    v, q, mean = jax.lax.cond(
+        has_drop | need, vqm_matvec, vqm_closed, None
+    )
+    z, v, q, mean = collapsed_row_flip(
+        M1, H1, x_n, z, v, q, mean, u, m_minus, active_m, N, inv2s2,
+        flavor=flip_flavor,
+    )
+
+    # (adaptation: _sample_dishes now also returns the saturation flag —
+    # it consumes no randomness and does not perturb the legacy stream)
+    z, active_new, newbits, _, _ = _sample_dishes(
+        kdish, q, mean, x_n, active_m, z, alpha, sx, sa, N, D, birth
+    )
+
+    m_new = m_minus * active_m + z
+    changed = (
+        need | jnp.any(z != z_old) | jnp.any(active_new != active)
+    )
+
+    def stats_moved(_):
+        def masked(_):
+            return ((ZtZ - jnp.outer(z_old, z_old))
+                    * ibm.mask_outer(active_m) + jnp.outer(z, z),
+                    (ZtX - jnp.outer(z_old, x_n)) * active_m[:, None]
+                    + jnp.outer(z, x_n))
+
+        def fused(_):
+            return (ZtZ + jnp.outer(z, z) - jnp.outer(z_old, z_old),
+                    ZtX + jnp.outer(z - z_old, x_n))
+
+        return jax.lax.cond(has_drop, masked, fused, None)
+
+    ZtZ_n, ZtX_n = jax.lax.cond(
+        changed | has_drop, stats_moved, lambda _: (ZtZ, ZtX), None
+    )
+
+    def apply_moves(_):
+        Lt1 = jax.lax.cond(
+            need,
+            lambda __: Lt_rm,
+            lambda __: ibm.chol_rank1_downdate_t(Lt, p_down)[0],
+            None,
+        )
+
+        def diag_swaps(ops):
+            Lt1, M1, H1 = ops
+            keep2 = ibm.mask_outer(active_m)
+            Lt1 = Lt1 * keep2 + jnp.diag(1.0 - active_m)
+            Lt1 = Lt1 + jnp.diag(newbits * (jnp.sqrt(ratio) - 1.0))
+            M1b = M1 + jnp.diag(newbits / ratio)
+            H1b = H1 * (1.0 - newbits)[:, None]
+            return Lt1, M1b, H1b
+
+        Lt1, M1b, H1b = jax.lax.cond(
+            has_drop | jnp.any(newbits > 0.5), diag_swaps, lambda ops: ops,
+            (Lt1, M1, H1),
+        )
+        w2 = M1b @ z
+        Lt2 = ibm.chol_rank1_update_t(Lt1, Lt1 @ w2)
+        d2 = 1.0 + jnp.dot(z, w2)
+        w2r = w2 / jnp.sqrt(d2)
+        M2 = M1b - jnp.outer(w2r, w2r)
+        H2 = H1b + jnp.outer(w2 / d2, x_n - z @ H1b)
+        return Lt2, M2, H2
+
+    Lt_n, M_n, H_n = jax.lax.cond(
+        changed, apply_moves, lambda _: (Lt, M, H), None
+    )
+    Z = Z.at[n].set(z)
+    return _FastCarry(
+        Z=Z, active=active_new, ZtZ=ZtZ_n, ZtX=ZtX_n, m=m_new,
+        Lt=Lt_n, M=M_n, H=H_n, since=since, n_refresh=n_refresh, key=key,
+    ), None
+
+
+def _legacy_row_scan(Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa, *,
+                     N, birth, refresh_every, drift_tol):
+    """The deleted unpacked fast branch of ``collapsed_row_scan``,
+    verbatim (flip_flavor="packed" was the non-pallas fast path)."""
+    n_rows, D = X.shape
+    rows = jnp.arange(n_rows)
+    ratio = (sx / sa) ** 2
+    Lt, M, H = _exact_factor(ZtZ, ZtX, active, ratio)
+    body = partial(
+        _row_step_fast, X=X, N=N, D=D, birth=birth,
+        alpha=alpha, sx=sx, sa=sa,
+        refresh_every=refresh_every, drift_tol=drift_tol,
+        flip_flavor="packed",
+    )
+    carry = _FastCarry(
+        Z=Z, active=active, ZtZ=ZtZ, ZtX=ZtX, m=m, Lt=Lt, M=M, H=H,
+        since=jnp.zeros((), jnp.int32), n_refresh=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+    carry, _ = jax.lax.scan(body, carry, rows)
+    return (carry.Z, carry.active, carry.ZtZ, carry.ZtX, carry.m,
+            carry.n_refresh)
+
+
+# --------------------------------------------------------------------------
+# the certification
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def data():
+    X, _, _ = cambridge_data(N=100, sigma_n=0.4, seed=3)
+    return jnp.asarray(X)
+
+
+def _init_stats(X, seed, K_max=16):
+    N, D = X.shape
+    st = init_state(jax.random.key(seed), N, D, K_max=K_max, K_init=3)
+    Z, active = st.Z, st.active
+    m = jnp.sum(Z * active[None, :], axis=0)
+    ZtZ = (Z.T @ Z) * ibm.mask_outer(active)
+    ZtX = (Z.T @ X) * active[:, None]
+    return (Z, active, ZtZ, ZtX, m), (st.alpha, st.sigma_x, st.sigma_a)
+
+
+def _chain(X, seed, birth, refresh_every, n_scans, runner):
+    """Thread ``n_scans`` row scans through ``runner``; per-scan keys are
+    folded from a shared base so both implementations see identical
+    randomness without needing the carry's key output."""
+    (Z, active, ZtZ, ZtX, m), (alpha, sx, sa) = _init_stats(X, seed)
+    base = jax.random.key(1000 + seed)
+    out = None
+    for i in range(n_scans):
+        key = jax.random.fold_in(base, i)
+        Z, active, ZtZ, ZtX, m, n_refresh = runner(
+            Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa,
+            birth=birth, refresh_every=refresh_every)
+        out = (Z, active, ZtZ, ZtX, m, n_refresh)
+    return out
+
+
+def _run_unified(Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa, *,
+                 birth, refresh_every):
+    Z, active, ZtZ, ZtX, m, n_refresh, _ = collapsed_row_scan(
+        Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa,
+        N=float(X.shape[0]), birth=birth, backend="fast",
+        refresh_every=refresh_every, pack=False)
+    return Z, active, ZtZ, ZtX, m, n_refresh
+
+
+def _run_legacy(Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa, *,
+                birth, refresh_every):
+    return _legacy_row_scan(
+        Z, active, ZtZ, ZtX, m, X, key, alpha, sx, sa,
+        N=float(X.shape[0]), birth=birth, refresh_every=refresh_every,
+        drift_tol=1e-2)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("refresh", [8, 32])
+def test_top_bucket_bitwise_matches_deleted_unpacked_path(
+        data, seed, refresh):
+    """The unified packed core at B = K_max (G carry off) IS the deleted
+    unpacked carry, bit for bit — every carry array, chained scans."""
+    a = _chain(data, seed, "gibbs", refresh, n_scans=3, runner=_run_legacy)
+    b = _chain(data, seed, "gibbs", refresh, n_scans=3, runner=_run_unified)
+    for name, x, y in zip(("Z", "active", "ZtZ", "ZtX", "m", "n_refresh"),
+                          a, b):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{name} diverged (seed={seed}, refresh={refresh})")
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_top_bucket_bitwise_matches_legacy_mh_births(data, seed):
+    """Same certification under the MH birth flavor (the saturation
+    counter's branch) — the sat extraction must not perturb the stream."""
+    a = _chain(data, seed, "mh", 16, n_scans=3, runner=_run_legacy)
+    b = _chain(data, seed, "mh", 16, n_scans=3, runner=_run_unified)
+    for name, x, y in zip(("Z", "active", "ZtZ", "ZtX", "m", "n_refresh"),
+                          a, b):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{name} diverged (seed={seed})")
